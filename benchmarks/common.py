@@ -1,0 +1,216 @@
+"""Shared benchmark harness: exact window ground truth via prefix Grams,
+jitted DS-FD stream runners that also emit live-row counts (space), and
+the error/space sweep used by every figure/table reproduction.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import functools
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, name)
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Exact ground truth: prefix Grams at query points
+# ---------------------------------------------------------------------------
+
+
+class WindowOracle:
+    """Exact A_WᵀA_W at query timestamps, O(n·d²) once.
+
+    Sequence-based: window = last N rows.  Time-based: rows carry
+    timestamps; window = rows with ts in (t−N, t]."""
+
+    def __init__(self, rows: np.ndarray, window: int,
+                 timestamps: Optional[np.ndarray] = None):
+        self.rows = rows.astype(np.float64)
+        self.window = window
+        self.ts = timestamps
+
+    def grams_at(self, query_idx: Sequence[int]) -> Dict[int, np.ndarray]:
+        """Gram of the window ending at row-index t (1-based, inclusive)."""
+        d = self.rows.shape[1]
+        need = set()
+        for t in query_idx:
+            need.add(t)
+            need.add(self._window_start(t))
+        need = sorted(need)
+        grams = {}
+        G = np.zeros((d, d), np.float64)
+        pos = 0
+        for idx in need:
+            seg = self.rows[pos:idx]
+            if len(seg):
+                G = G + seg.T @ seg
+            pos = idx
+            grams[idx] = G.copy()
+        return {t: grams[t] - grams[self._window_start(t)]
+                for t in query_idx}
+
+    def _window_start(self, t: int) -> int:
+        if self.ts is None:
+            return max(t - self.window, 0)
+        # time-based: first row index with ts > ts[t-1] − N
+        cut = self.ts[t - 1] - self.window
+        return int(np.searchsorted(self.ts[:t], cut, side="right"))
+
+    def fro2_at(self, t: int) -> float:
+        lo = self._window_start(t)
+        seg = self.rows[lo:t]
+        return float(np.sum(seg * seg))
+
+
+def spec_err(G: np.ndarray, B: np.ndarray) -> float:
+    M = G - B.astype(np.float64).T @ B.astype(np.float64)
+    return float(np.linalg.norm(M, 2))
+
+
+# ---------------------------------------------------------------------------
+# DS-FD runners (jitted scans emitting query rows + live-row counts)
+# ---------------------------------------------------------------------------
+
+
+def run_dsfd(rows: np.ndarray, eps: float, window: int, *,
+             mode: str = "fast", query_every: int,
+             timestamps: Optional[np.ndarray] = None):
+    """Returns (queries: {t: B_rows}, max_live_rows, wall_s)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.dsfd import make_config, dsfd_init, dsfd_update, \
+        dsfd_query_rows
+
+    d = rows.shape[1]
+    cfg = make_config(d, eps, window, mode=mode)
+
+    @functools.partial(jax.jit, static_argnames=())
+    def scan_all(data, ts):
+        def step(state, inp):
+            t, row = inp
+            state = dsfd_update(cfg, state, row, t)
+            live = (jnp.sum(state.main.snap_valid) + state.main.nbuf
+                    + jnp.sum(state.aux.snap_valid) + state.aux.nbuf)
+            out = jax.lax.cond(
+                jnp.mod(t, query_every) == 0,
+                lambda s: dsfd_query_rows(cfg, s, now=t),
+                lambda s: jnp.zeros((cfg.cap + cfg.m, cfg.d), jnp.float32),
+                state)
+            return state, (out, live)
+
+        state = dsfd_init(cfg)
+        return jax.lax.scan(step, state, (ts, data))
+
+    n = rows.shape[0]
+    ts = (jnp.asarray(timestamps, jnp.int32) if timestamps is not None
+          else jnp.arange(1, n + 1, dtype=jnp.int32))
+    t0 = time.time()
+    _, (outs, live) = scan_all(jnp.asarray(rows, jnp.float32), ts)
+    outs = np.asarray(outs)
+    live = np.asarray(live)
+    wall = time.time() - t0
+    ts_np = np.asarray(ts)
+    queries = {int(i + 1): outs[i] for i in range(n)
+               if ts_np[i] % query_every == 0}
+    return queries, int(live.max()), wall
+
+
+def run_layered(rows: np.ndarray, eps: float, window: int, R: float, *,
+                time_based: bool = False, query_every: int,
+                timestamps: Optional[np.ndarray] = None, beta: float = 4.0):
+    """Seq-DS-FD / Time-DS-FD runner.  Query index is the *row* index;
+    expiry uses the provided timestamps."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.seq_dsfd import (make_seq_config, make_time_config,
+                                     layered_init, layered_update,
+                                     layered_query_rows)
+
+    d = rows.shape[1]
+    mk = make_time_config if time_based else make_seq_config
+    cfg = mk(d, eps, window, R, beta=beta)
+
+    @jax.jit
+    def scan_all(data, ts):
+        def step(carry, inp):
+            state, i = carry
+            t, row = inp
+            state = layered_update(cfg, state, row, t)
+            live = (jnp.sum(state.main.snap_valid) + jnp.sum(state.main.nbuf)
+                    + jnp.sum(state.aux.snap_valid)
+                    + jnp.sum(state.aux.nbuf))
+            out = jax.lax.cond(
+                jnp.mod(i + 1, query_every) == 0,
+                lambda s: layered_query_rows(cfg, s, t),
+                lambda s: jnp.zeros((cfg.base.cap + cfg.base.m, cfg.base.d),
+                                    jnp.float32),
+                state)
+            return (state, i + 1), (out, live)
+
+        state = layered_init(cfg)
+        (state, _), outs = jax.lax.scan(
+            step, (state, jnp.zeros((), jnp.int32)), (ts, data))
+        return outs
+
+    n = rows.shape[0]
+    ts = (jnp.asarray(timestamps, jnp.int32) if timestamps is not None
+          else jnp.arange(1, n + 1, dtype=jnp.int32))
+    t0 = time.time()
+    outs, live = scan_all(jnp.asarray(rows, jnp.float32), ts)
+    outs = np.asarray(outs)
+    live = np.asarray(live)
+    wall = time.time() - t0
+    queries = {i + 1: outs[i] for i in range(n) if (i + 1) % query_every == 0}
+    return queries, int(live.max()), wall
+
+
+# ---------------------------------------------------------------------------
+# Baseline runner (numpy classes with update/query/n_rows_stored)
+# ---------------------------------------------------------------------------
+
+
+def run_baseline(alg, rows: np.ndarray, *, query_every: int,
+                 timestamps: Optional[np.ndarray] = None):
+    n = rows.shape[0]
+    queries = {}
+    peak = 0
+    t0 = time.time()
+    for i in range(n):
+        t = int(timestamps[i]) if timestamps is not None else i + 1
+        alg.update(rows[i], t)
+        peak = max(peak, alg.n_rows_stored)
+        if (i + 1) % query_every == 0:
+            queries[i + 1] = alg.query()
+    return queries, peak, time.time() - t0
+
+
+def eval_queries(oracle: WindowOracle, queries: Dict[int, np.ndarray],
+                 min_t: int = 0):
+    """(avg_rel_err, max_rel_err) over queries with t ≥ min_t."""
+    grams = oracle.grams_at([t for t in queries if t >= min_t])
+    errs = []
+    for t, B in queries.items():
+        if t < min_t:
+            continue
+        fro2 = max(oracle.fro2_at(t), 1e-12)
+        errs.append(spec_err(grams[t], B) / fro2)
+    if not errs:
+        return float("nan"), float("nan")
+    return float(np.mean(errs)), float(np.max(errs))

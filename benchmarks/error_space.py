@@ -1,0 +1,101 @@
+"""Error-vs-space sweeps — reproduces Figures 4, 5, 6 (sequence-based) and
+Figures 8, 9 (time-based) plus the empirical side of Table 1.
+
+For each algorithm we sweep the precision parameter (1/ε) and record the
+*maximum sketch rows* ever held against the average / maximum relative
+covariance error over all queries — exactly the trade-off the paper plots.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import (WindowOracle, eval_queries, run_baseline,
+                               run_dsfd, run_layered, write_csv)
+from repro.data.streams import get_stream
+
+
+def sweep(dataset: str, *, scale: float = 0.1, seed: int = 0,
+          eps_list=(1 / 4, 1 / 8, 1 / 16, 1 / 32),
+          algs=("dsfd", "lmfd", "difd", "swr", "swor"),
+          queries: int = 24) -> List[Dict]:
+    from repro.core.baselines import LMFD, DIFD, SWR, SWOR
+
+    spec = get_stream(dataset, scale=scale, seed=seed)
+    rows, N, ts = spec.rows, spec.window, spec.timestamps
+    time_based = ts is not None
+    R = spec.R
+    n = rows.shape[0]
+    q = max(N // 4, n // queries)
+    oracle = WindowOracle(rows, N, ts)
+    min_t = N  # evaluate only full windows
+    out = []
+    for eps in eps_list:
+        for alg in algs:
+            try:
+                if alg == "dsfd":
+                    if time_based or R > 1.001:
+                        qs, peak, wall = run_layered(
+                            rows, eps, N, R, time_based=time_based,
+                            query_every=q, timestamps=ts)
+                    else:
+                        qs, peak, wall = run_dsfd(rows, eps, N,
+                                                  query_every=q)
+                elif alg == "lmfd":
+                    qs, peak, wall = run_baseline(
+                        LMFD(spec.d, eps, N), rows, query_every=q,
+                        timestamps=ts)
+                elif alg == "difd":
+                    if time_based:
+                        continue        # DI-FD is sequence-based only (§2.2)
+                    qs, peak, wall = run_baseline(
+                        DIFD(spec.d, eps, N, R=R), rows, query_every=q,
+                        timestamps=ts)
+                elif alg in ("swr", "swor"):
+                    ell = int(min(max(4 / eps ** 2, 8), 4096))
+                    cls = SWR if alg == "swr" else SWOR
+                    qs, peak, wall = run_baseline(
+                        cls(spec.d, ell=ell, window=N, seed=seed), rows,
+                        query_every=q, timestamps=ts)
+                else:
+                    continue
+                avg, worst = eval_queries(oracle, qs, min_t=min_t)
+                out.append({
+                    "dataset": spec.name, "alg": alg, "inv_eps": round(1 / eps),
+                    "max_rows": peak, "avg_err": avg, "max_err": worst,
+                    "wall_s": round(wall, 3), "n": n, "window": N,
+                    "R": round(R, 2),
+                })
+                print(f"  {spec.name:<10s} {alg:<5s} 1/eps={1/eps:4.0f} "
+                      f"rows={peak:6d} avg={avg:.5f} max={worst:.5f} "
+                      f"({wall:.1f}s)", flush=True)
+            except Exception as e:   # noqa: BLE001 — sweep robustness
+                print(f"  {dataset} {alg} eps={eps}: FAILED {e!r}",
+                      flush=True)
+    return out
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="synthetic")
+    ap.add_argument("--scale", type=float, default=0.1)
+    ap.add_argument("--eps", type=float, nargs="*", default=None)
+    ap.add_argument("--algs", nargs="*", default=None)
+    args = ap.parse_args(argv)
+    kw = {}
+    if args.eps:
+        kw["eps_list"] = args.eps
+    if args.algs:
+        kw["algs"] = args.algs
+    rows = sweep(args.dataset, scale=args.scale, **kw)
+    path = write_csv(f"error_space_{args.dataset}.csv", rows)
+    print("wrote", path)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""§Roofline report: renders the dry-run artifacts into the per-(arch ×
+shape × mesh) table EXPERIMENTS.md embeds — three terms, dominant
+bottleneck, MODEL_FLOPS/HLO ratio, roofline fraction, and memory fit."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def load(mesh: str, base: str = "dryrun") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, base, mesh, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def table(mesh: str, base: str = "dryrun") -> str:
+    rows = load(mesh, base)
+    out = ["| arch | shape | GB/dev | compute_s | memory_s | collective_s "
+           "| dominant | useful | MFU* |",
+           "|---|---|---:|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_per_device']/1e9:.1f} "
+            f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} "
+            f"| {rf['collective_s']:.3g} | {rf['dominant']} "
+            f"| {rf['useful_ratio']:.2f} "
+            f"| {rf.get('roofline_fraction', 0)*100:.1f}% |")
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--base", default="dryrun")
+    args = ap.parse_args(argv)
+    print(table(args.mesh, args.base))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper artifact (Table 1 / Figures 4-9 / Table 4) plus the
+roofline report.  Default scales are CPU-budget-friendly; ``--full`` uses
+the paper's dataset sizes.  Every section writes a CSV under
+benchmarks/artifacts/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale datasets (hours on CPU)")
+    ap.add_argument("--sections", nargs="*", default=None,
+                    help="subset: error_space space_growth timing roofline")
+    args = ap.parse_args(argv)
+    scale = 1.0 if args.full else 0.06
+    t_scale = 1.0 if args.full else 0.04
+    sections = args.sections or ["error_space", "space_growth", "timing",
+                                 "roofline"]
+    t0 = time.time()
+
+    if "error_space" in sections:
+        from benchmarks.error_space import sweep
+        from benchmarks.common import write_csv
+        # CPU-budget default: three ε points per dataset (the slope is
+        # already unambiguous); --full extends to the paper's range.
+        eps_seq = (1 / 4, 1 / 8, 1 / 16) if not args.full else \
+            (1 / 8, 1 / 16, 1 / 32, 1 / 64, 1 / 128)
+        print("== error vs space: sequence-based (Figs 4/5/6, Table 1) ==",
+              flush=True)
+        for ds in ("synthetic", "bibd", "pamap2"):
+            rows = sweep(ds, scale=scale, eps_list=eps_seq)
+            write_csv(f"error_space_{ds}.csv", rows)
+        print("== error vs space: time-based (Figs 8/9) ==", flush=True)
+        for ds in ("rail", "year"):
+            rows = sweep(ds, scale=t_scale, eps_list=eps_seq,
+                         algs=("dsfd", "lmfd", "swr", "swor"))
+            write_csv(f"error_space_{ds}.csv", rows)
+
+    if "space_growth" in sections:
+        print("== space growth vs 1/eps (Fig 7) ==", flush=True)
+        from benchmarks.space_growth import sweep as sg
+        from benchmarks.common import write_csv
+        write_csv("space_growth_rail.csv", sg("rail", scale=t_scale))
+
+    if "timing" in sections:
+        print("== update/query timing (Table 4) ==", flush=True)
+        from benchmarks.timing import bench
+        from benchmarks.common import write_csv
+        write_csv("table4_timing.csv",
+                  bench("bibd", scale=0.5 if args.full else 0.03))
+
+    if "roofline" in sections:
+        print("== roofline report (16x16) ==", flush=True)
+        from benchmarks.roofline_report import table
+        try:
+            print(table("16x16"))
+        except Exception as e:   # noqa: BLE001
+            print("  (no dry-run artifacts yet:", e, ")")
+
+    print(f"benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Figure 7: parameter 1/ε vs maximum sketch size, time-based window —
+LM-FD's O(d/ε²·log εNR) growth against Time-DS-FD's O(d/ε·log εNR)."""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from benchmarks.common import run_baseline, run_layered, write_csv
+from repro.data.streams import get_stream
+
+
+def sweep(dataset: str = "rail", *, scale: float = 0.05, seed: int = 0,
+          eps_list=(1 / 4, 1 / 8, 1 / 16, 1 / 32)) -> List[Dict]:
+    from repro.core.baselines import LMFD
+
+    spec = get_stream(dataset, scale=scale, seed=seed)
+    rows, N, ts = spec.rows, spec.window, spec.timestamps
+    q = max(len(rows) // 8, 1)
+    out = []
+    for eps in eps_list:
+        _, peak_ds, _ = run_layered(rows, eps, N, spec.R, time_based=True,
+                                    query_every=q, timestamps=ts)
+        _, peak_lm, _ = run_baseline(LMFD(spec.d, eps, N), rows,
+                                     query_every=q, timestamps=ts)
+        out.append({"dataset": spec.name, "inv_eps": round(1 / eps),
+                    "dsfd_rows": peak_ds, "lmfd_rows": peak_lm})
+        print(f"  {spec.name} 1/eps={1/eps:4.0f} DS-FD={peak_ds:6d} "
+              f"LM-FD={peak_lm:6d}", flush=True)
+    return out
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="rail")
+    ap.add_argument("--scale", type=float, default=0.05)
+    args = ap.parse_args(argv)
+    rows = sweep(args.dataset, scale=args.scale)
+    print("wrote", write_csv(f"space_growth_{args.dataset}.csv", rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Table 4: average per-update and per-query wall time on the BIBD-like
+stream at ε = 1/100.  DS-FD runs both as the paper's per-row algorithm
+(jitted single-step, apples-to-apples with the numpy baselines) and as the
+fused lax.scan pipeline (the deployment mode)."""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import run_baseline, write_csv
+from repro.data.streams import get_stream
+
+
+def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
+          seed: int = 0, n_queries: int = 10) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.core.baselines import LMFD, DIFD, SWR, SWOR
+    from repro.core.dsfd import (make_config, dsfd_init, dsfd_update,
+                                 dsfd_query)
+
+    spec = get_stream(dataset, scale=scale, seed=seed)
+    rows, N = spec.rows, spec.window
+    n = len(rows)
+    q = max(n // n_queries, 1)
+    out = []
+
+    # numpy baselines
+    for name, alg in [
+        ("LM-FD", LMFD(spec.d, eps, N)),
+        ("DI-FD", DIFD(spec.d, eps, N, R=spec.R)),
+        ("SWR", SWR(spec.d, ell=min(int(4 / eps ** 2), 2048), window=N,
+                    seed=seed)),
+        ("SWOR", SWOR(spec.d, ell=min(int(4 / eps ** 2), 2048), window=N,
+                      seed=seed)),
+    ]:
+        t0 = time.time()
+        tq = 0.0
+        nq = 0
+        for i in range(n):
+            alg.update(rows[i], i + 1)
+            if (i + 1) % q == 0:
+                tq0 = time.time()
+                alg.query()
+                tq += time.time() - tq0
+                nq += 1
+        wall = time.time() - t0 - tq
+        out.append({"alg": name, "update_ms": 1e3 * wall / n,
+                    "query_ms": 1e3 * tq / max(nq, 1)})
+
+    # DS-FD — per-row jitted step (paper's algorithm, honest per-op cost)
+    cfg = make_config(spec.d, eps, N, mode="fast")
+    step = jax.jit(lambda st, r, t: dsfd_update(cfg, st, r, t))
+    query = jax.jit(lambda st: dsfd_query(cfg, st))
+    st = dsfd_init(cfg)
+    data = jnp.asarray(rows[: min(n, 3 * N)], jnp.float32)
+    st = step(st, data[0], 1)  # compile
+    jax.block_until_ready(st)
+    query(st)
+    t0 = time.time()
+    m = min(len(data), 4000)
+    for i in range(1, m):
+        st = step(st, data[i], i + 1)
+    jax.block_until_ready(st)
+    upd_ms = 1e3 * (time.time() - t0) / (m - 1)
+    t0 = time.time()
+    for _ in range(max(n_queries, 5)):
+        b = query(st)
+    jax.block_until_ready(b)
+    q_ms = 1e3 * (time.time() - t0) / max(n_queries, 5)
+    out.append({"alg": "DS-FD(step)", "update_ms": upd_ms,
+                "query_ms": q_ms})
+
+    # DS-FD — fused scan (deployment mode: whole stream in one XLA program)
+    from benchmarks.common import run_dsfd
+    _, _, wall = run_dsfd(rows, eps, N, query_every=q)
+    out.append({"alg": "DS-FD(scan)", "update_ms": 1e3 * wall / n,
+                "query_ms": float("nan")})
+
+    for r in out:
+        print(f"  {r['alg']:<12s} update {r['update_ms']:8.3f} ms  "
+              f"query {r['query_ms']:8.3f} ms", flush=True)
+    return out
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="bibd")
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--eps", type=float, default=0.01)
+    args = ap.parse_args(argv)
+    rows = bench(args.dataset, scale=args.scale, eps=args.eps)
+    print("wrote", write_csv("table4_timing.csv", rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

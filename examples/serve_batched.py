@@ -1,0 +1,41 @@
+"""Batched serving demo: continuous batching over a reduced qwen1.5-0.5b
+family model — requests of mixed prompt lengths stream through a fixed
+slot pool, finished slots refill without recompilation.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.models.params import init_params
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+cfg = get_config("qwen1.5-0.5b").reduced()
+params = init_params(api.param_defs(cfg), jax.random.PRNGKey(0))
+eng = ServeEngine(cfg, params,
+                  EngineConfig(slots=4, s_max=96, prefill_buckets=(16, 32)))
+
+rng = np.random.default_rng(0)
+t0 = time.time()
+for uid in range(16):
+    plen = int(rng.integers(3, 30))
+    eng.submit(Request(uid=uid,
+                       prompt=rng.integers(0, cfg.vocab,
+                                           plen).astype(np.int32),
+                       max_new=int(rng.integers(4, 12))))
+done = eng.run()
+dt = time.time() - t0
+
+toks = sum(len(r.out_tokens) for r in done.values())
+lat = sorted(r.latency_s for r in done.values())
+print(f"{len(done)} requests / {toks} tokens in {dt:.2f}s "
+      f"→ {toks/dt:.1f} tok/s on 1 CPU device")
+print(f"latency p50={lat[len(lat)//2]:.2f}s p95={lat[-1]:.2f}s; "
+      f"engine ticks={eng.ticks} (continuous batching: "
+      f"{toks/max(eng.ticks,1):.2f} tokens/tick over 4 slots)")
+assert len(done) == 16

@@ -1,0 +1,60 @@
+"""End-to-end training driver with every DS-FD integration enabled:
+
+* a ~100M-param-class transformer (reduced smollm family) trained for a
+  few hundred steps on the synthetic token pipeline,
+* SlidingGradSketch monitoring the windowed gradient subspace,
+* FD gradient compression with error feedback,
+* periodic atomic checkpoints + resume.
+
+Run:  PYTHONPATH=src python examples/train_with_sketch.py [--steps 200]
+"""
+
+import argparse
+import logging
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.sketch import CompressConfig, SketchConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.train_step import TrainStepConfig
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--seq-len", type=int, default=128)
+ap.add_argument("--batch", type=int, default=16)
+args = ap.parse_args()
+
+cfg = get_config("smollm-135m").reduced()
+mesh = jax.make_mesh((1, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ck_")
+
+tsc = TrainStepConfig(
+    sketch=SketchConfig(d=128, eps=0.125, window=128),
+    compress=CompressConfig(rank=8, eps=0.25, window=16, min_size=4096,
+                            summary_rows=4),
+)
+
+res = train(cfg, mesh,
+            loop=LoopConfig(steps=args.steps, ckpt_dir=ckpt_dir,
+                            ckpt_every=50, log_every=20),
+            tsc=tsc, seq_len=args.seq_len, global_batch=args.batch)
+
+losses = [h["loss"] for h in res["history"]]
+top = [h.get("sketch/top_energy", 0.0) for h in res["history"]]
+print(f"\nloss: {losses[0]:.3f} → {losses[-1]:.3f} over {args.steps} steps "
+      f"({res['steps_per_s']:.2f} steps/s)")
+print(f"windowed grad-sketch top energy (last): {top[-1]:.3e}")
+print(f"checkpoints under {ckpt_dir}")
+assert np.mean(losses[-10:]) < np.mean(losses[:10]), "did not learn"
+print("resuming from checkpoint for 20 more steps (elastic restart path)…")
+res2 = train(cfg, mesh,
+             loop=LoopConfig(steps=args.steps + 20, ckpt_dir=ckpt_dir,
+                             ckpt_every=50, log_every=20),
+             tsc=tsc, seq_len=args.seq_len, global_batch=args.batch)
+print(f"resumed: step {res2['step']}, loss {res2['history'][-1]['loss']:.3f}")

@@ -1,0 +1,3 @@
+from repro.configs.base import (ModelConfig, MoECfg, SSMCfg, RGLRUCfg,
+                                ShapeSpec, SHAPES, get_config, all_configs,
+                                shape_cells, register)

@@ -1,0 +1,9 @@
+"""qwen2-vl-2b [vlm] — M-RoPE backbone; vision patch frontend is a STUB:
+input_specs() provides precomputed M-RoPE position ids (arXiv:2409.12191)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-2b", family="vlm",
+    n_layers=28, d_model=1536, n_heads=12, n_kv=2, d_ff=8960, vocab=151936,
+    qkv_bias=True, mrope_sections=(16, 24, 24), tied_embeddings=True,
+    rope_theta=1_000_000.0))

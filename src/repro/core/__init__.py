@@ -1,0 +1,26 @@
+"""The paper's primary contribution: DS-FD matrix sketching over sliding
+windows (PVLDB'24), implemented as pure-JAX scan/jit/vmap-compatible state
+machines, plus the full baseline suite it is evaluated against."""
+
+from repro.core.fd import (FDState, fd_init, fd_update, fd_absorb,
+                           fd_compress, fd_query, fd_merge)
+from repro.core.dsfd import (DSFDConfig, DSFDState, make_config, dsfd_init,
+                             dsfd_update, dsfd_query, dsfd_query_rows,
+                             dsfd_run_stream)
+from repro.core.seq_dsfd import (LayeredConfig, make_seq_config,
+                                 make_time_config, layered_init,
+                                 layered_update, layered_query,
+                                 layered_query_rows, layered_select,
+                                 layered_run_stream)
+from repro.core import errors
+
+__all__ = [
+    "FDState", "fd_init", "fd_update", "fd_absorb", "fd_compress",
+    "fd_query", "fd_merge",
+    "DSFDConfig", "DSFDState", "make_config", "dsfd_init", "dsfd_update",
+    "dsfd_query", "dsfd_query_rows", "dsfd_run_stream",
+    "LayeredConfig", "make_seq_config", "make_time_config", "layered_init",
+    "layered_update", "layered_query", "layered_query_rows",
+    "layered_select", "layered_run_stream",
+    "errors",
+]

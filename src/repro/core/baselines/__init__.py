@@ -1,0 +1,11 @@
+"""Baseline sliding-window sketches the paper compares against (Table 1 /
+Figures 4-9): LM-FD (Exponential Histogram FD), DI-FD (Dyadic Interval FD),
+SWR / SWOR row sampling.  These are benchmark comparators and run on the host
+(numpy), exactly like the paper's own Python implementations."""
+
+from repro.core.baselines.npfd import NpFD
+from repro.core.baselines.lmfd import LMFD
+from repro.core.baselines.difd import DIFD
+from repro.core.baselines.sampling import SWR, SWOR
+
+__all__ = ["NpFD", "LMFD", "DIFD", "SWR", "SWOR"]

@@ -1,0 +1,41 @@
+"""Covariance-error metrics (Problem 1 definitions) + exact window ground truth."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def spectral_norm(mat: jax.Array) -> jax.Array:
+    """‖M‖₂ for a (d, d) symmetric matrix via eigh (exact, small d)."""
+    return jnp.max(jnp.abs(jnp.linalg.eigvalsh(mat)))
+
+
+def cova_error(A: jax.Array, B: jax.Array) -> jax.Array:
+    """‖AᵀA − BᵀB‖₂ — the paper's covariance error."""
+    return spectral_norm(A.T @ A - B.T @ B)
+
+
+def cova_error_gram(AtA: jax.Array, B: jax.Array) -> jax.Array:
+    return spectral_norm(AtA - B.T @ B)
+
+
+def relative_error(A: jax.Array, B: jax.Array) -> jax.Array:
+    """‖AᵀA − BᵀB‖₂ / ‖A‖_F² (the metric reported in Figures 4-9)."""
+    return cova_error(A, B) / jnp.maximum(jnp.sum(A * A), 1e-30)
+
+
+def window_gram_np(rows: np.ndarray, t: int, window: int) -> np.ndarray:
+    """Exact A_WᵀA_W for the window (t-N, t] over a host-resident stream.
+
+    ``rows`` is the full (n, d) stream, ``t`` is 1-indexed."""
+    lo = max(t - window, 0)
+    aw = rows[lo:t]
+    return aw.T @ aw
+
+
+def window_fro_np(rows: np.ndarray, t: int, window: int) -> float:
+    lo = max(t - window, 0)
+    aw = rows[lo:t]
+    return float(np.sum(aw * aw))

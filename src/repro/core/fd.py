@@ -1,0 +1,132 @@
+"""FrequentDirections (Liberty 2013; Ghashami et al. 2016) — jittable, scan-friendly.
+
+This is the streaming primitive the paper builds on.  The sketch is a fixed
+``(2ℓ, d)`` row buffer; rows ``[0, nbuf)`` hold data.  Incoming rows are written
+into free slots (FastFD buffering); when the buffer fills, a single SVD
+*shrink* subtracts ``σ_ℓ²`` from every squared singular value, zeroing at
+least ``ℓ+1`` rows.  Guarantee (with ``ε = 1/ℓ``)::
+
+    ‖AᵀA − BᵀB‖₂ ≤ ‖A‖_F² / ℓ        and        BᵀB ⪯ AᵀA .
+
+Everything here is a pure function on a NamedTuple state so it composes with
+``jax.jit`` / ``lax.scan`` / ``jax.vmap`` / ``shard_map``.  Shapes are static.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FDState(NamedTuple):
+    """FrequentDirections sketch state.
+
+    buf:   (m, d) row buffer, m = 2ℓ.  Rows ≥ nbuf are zero.
+    nbuf:  int32 — number of occupied rows.
+    shed:  f32 — cumulative Σ σ_ℓ² discarded by shrinks (diagnostic; the FD
+           error bound says ``shed ≤ (‖A‖_F² − ‖B‖_F²)/ℓ``).
+    """
+
+    buf: jax.Array
+    nbuf: jax.Array
+    shed: jax.Array
+
+
+def fd_init(ell: int, d: int, dtype=jnp.float32) -> FDState:
+    ell = int(min(ell, d))
+    m = 2 * ell
+    return FDState(
+        buf=jnp.zeros((m, d), dtype),
+        nbuf=jnp.zeros((), jnp.int32),
+        shed=jnp.zeros((), dtype),
+    )
+
+
+def _svd_rows(buf: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """SVD of the buffer; returns (rows = Σ·Vᵀ padded to buf.shape, σ²)."""
+    m, d = buf.shape
+    # full_matrices=False: S has r = min(m, d) entries, Vt is (r, d).
+    _, s, vt = jnp.linalg.svd(buf, full_matrices=False)
+    rows = s[:, None] * vt                               # (r, d), sorted desc
+    if rows.shape[0] < m:                                # pad when d < m
+        rows = jnp.concatenate(
+            [rows, jnp.zeros((m - rows.shape[0], d), buf.dtype)], axis=0)
+        s = jnp.concatenate([s, jnp.zeros((m - s.shape[0],), s.dtype)])
+    return rows, s * s
+
+
+def fd_rotate(buf: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Lossless re-orthogonalization: rows become σᵢ·vᵢᵀ sorted by σ desc.
+
+    Returns (rows, σ²).  ``rowsᵀ rows == bufᵀ buf`` exactly (up to fp error).
+    """
+    return _svd_rows(buf)
+
+
+def fd_shrink(buf: jax.Array, ell: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The FD shrink: subtract σ_ℓ² from every σ², re-materialize rows.
+
+    Returns (rows, σ²_after, σ_ℓ²_discarded).  At least rows ℓ-1.. are zero.
+    """
+    rows, s2 = _svd_rows(buf)
+    delta = s2[ell - 1]
+    s2n = jnp.maximum(s2 - delta, 0.0)
+    # rows are σ·vᵀ; rescale each row by sqrt(new σ² / old σ²).
+    scale = jnp.sqrt(s2n / jnp.maximum(s2, 1e-30))
+    return rows * scale[:, None], s2n, delta
+
+
+def fd_update(state: FDState, row: jax.Array, *, ell: int) -> FDState:
+    """Absorb one row (FastFD cadence: shrink only when the buffer fills)."""
+    m = state.buf.shape[0]
+    buf = jax.lax.dynamic_update_index_in_dim(state.buf, row, state.nbuf, 0)
+    nbuf = state.nbuf + 1
+
+    def do_shrink(args):
+        buf, nbuf, shed = args
+        rows, _, delta = fd_shrink(buf, ell)
+        return rows, jnp.asarray(ell - 1, jnp.int32), shed + delta
+
+    def no_shrink(args):
+        return args
+
+    buf, nbuf, shed = jax.lax.cond(
+        nbuf >= m, do_shrink, no_shrink, (buf, nbuf, state.shed))
+    return FDState(buf, nbuf, shed)
+
+
+def fd_absorb(state: FDState, rows: jax.Array, *, ell: int) -> FDState:
+    """Absorb a block of rows via scan (rows with all-zero entries are skipped
+    logically — they do not change BᵀB, so inserting them is harmless, but we
+    still skip to preserve buffer occupancy)."""
+
+    def step(st, r):
+        is_zero = jnp.sum(r * r) <= 0.0
+        st2 = fd_update(st, r, ell=ell)
+        st = jax.tree.map(lambda a, b: jnp.where(is_zero, a, b), st, st2)
+        return st, None
+
+    state, _ = jax.lax.scan(step, state, rows)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("ell",))
+def fd_compress(mat: jax.Array, ell: int) -> jax.Array:
+    """Compress an (n, d) matrix to a (2ℓ, d) FD sketch buffer (≤ ℓ-1 + tail
+    nonzero rows).  Used by queries to merge snapshots with the residual."""
+    st = fd_init(ell, mat.shape[1], mat.dtype)
+    st = fd_absorb(st, mat, ell=ell)
+    return st.buf
+
+
+def fd_query(state: FDState) -> jax.Array:
+    """The sketch matrix B (fixed shape (2ℓ, d); trailing rows zero)."""
+    return state.buf
+
+
+def fd_merge(a: FDState, b: FDState, *, ell: int) -> FDState:
+    """Merge two FD sketches (FD is mergeable: absorb b's rows into a)."""
+    return fd_absorb(a, b.buf, ell=ell)

@@ -1,0 +1,126 @@
+"""Pallas TPU flash-attention forward kernel (causal / full, GQA-aware).
+
+Tiling: grid = (B·H, nq, nkv) with the KV axis innermost ("arbitrary"
+semantics — it carries the online-softmax state); per (bh, qi) the
+accumulator (cq, dh) f32, row-max m and row-sum l live in VMEM scratch for
+the whole KV sweep and the output tile is written once at the last KV step.
+Causal tiles strictly above the diagonal are skipped with ``pl.when`` —
+the MXU never sees them, so the triangular FLOP saving is real, and Q/K/V/O
+cross HBM exactly once: bytes = (2·S·dh·(1 + 1/G))·B·H + S·dh·B·H vs the
+XLA chunked path's per-tile f32 score round-trips.
+
+Block shapes are MXU/VPU aligned: cq, ckv multiples of 128 lanes; dh is
+the contracted dim (64/128 for every assigned arch).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                      acc_ref, m_ref, l_ref, *, causal: bool,
+                      cq: int, ckv: int, scale: float, nkv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: tile fully above the diagonal ⇒ no work at all
+    diag_ok = (not causal) or (kj * ckv <= qi * cq + cq - 1)
+
+    @pl.when(diag_ok)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale            # (cq, dh)
+        k = k_ref[0].astype(jnp.float32)                    # (ckv, dh)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * cq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (cq, ckv), 0)
+            kpos = kj * ckv + jax.lax.broadcasted_iota(jnp.int32,
+                                                       (cq, ckv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0].astype(jnp.float32)                    # (ckv, dh)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(kj == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _compiler_params():
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is not None:
+            try:
+                return cls(dimension_semantics=("parallel", "parallel",
+                                                "arbitrary"))
+            except TypeError:
+                continue
+    return None
+
+
+def flash_fwd_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     causal: bool = True, cq: int = 256, ckv: int = 256,
+                     interpret: bool = False):
+    """q: (BH, S, dh); k, v: (BHkv, S, dh) with BH = BHkv·G.
+
+    Returns (o (BH, S, dh) in q.dtype, lse (BH, S) f32)."""
+    BH, S, dh = q.shape
+    BHkv = k.shape[0]
+    G = BH // BHkv
+    cq = min(cq, S)
+    ckv = min(ckv, S)
+    assert S % cq == 0 and S % ckv == 0, (S, cq, ckv)
+    nq, nkv = S // cq, S // ckv
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_flash_fwd_kernel, causal=causal, cq=cq,
+                               ckv=ckv, scale=scale, nkv=nkv)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, cq, dh), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, ckv, dh), lambda bh, i, j: (bh // G, j, 0)),
+            pl.BlockSpec((1, ckv, dh), lambda bh, i, j: (bh // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cq, dh), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, cq), lambda bh, i, j: (bh, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, dh), q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((cq, dh), jnp.float32),
+            pltpu.VMEM((cq,), jnp.float32),
+            pltpu.VMEM((cq,), jnp.float32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(q, k, v)

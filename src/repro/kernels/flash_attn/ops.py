@@ -1,0 +1,145 @@
+"""jit'd public flash-attention op with a flash-style custom VJP.
+
+Forward: the Pallas kernel (interpret mode off-TPU).  Residuals are only
+(q, k, v, o, lse) — never an S×S tensor.  Backward: two tile-recompute
+passes in pure JAX (dq: vmap over q blocks / scan over kv; dk,dv: vmap
+over kv blocks / scan over q) using the standard flash identities:
+
+    P  = exp(S − lse),  D = rowsum(dO ∘ O)
+    dV = Pᵀ dO;   dP = dO Vᵀ;   dS = P ∘ (dP − D);   dQ = dS·K;  dK = dSᵀ·Q
+
+Memory stays O(tile) per step — no stacked score residuals — and GQA
+gradients sum over the query-head group.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_fwd_pallas
+from repro.kernels.flash_attn.ref import flash_ref
+
+NEG_INF = -1e30
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, cq: int = 256,
+                    ckv: int = 256):
+    """q: (BH, S, dh); k, v: (BHkv, S, dh).  Returns (BH, S, dh)."""
+    o, _ = flash_fwd_pallas(q, k, v, causal=causal, cq=cq, ckv=ckv,
+                            interpret=_use_interpret())
+    return o
+
+
+def _fwd(q, k, v, causal, cq, ckv):
+    o, lse = flash_fwd_pallas(q, k, v, causal=causal, cq=cq, ckv=ckv,
+                              interpret=_use_interpret())
+    return o, (q, k, v, o, lse)
+
+
+def _tiles(x, c):
+    BH, S, dh = x.shape
+    return x.reshape(BH, S // c, c, dh)
+
+
+def _bwd(causal, cq, ckv, res, do):
+    q, k, v, o, lse = res
+    BH, S, dh = q.shape
+    BHkv = k.shape[0]
+    G = BH // BHkv
+    scale = 1.0 / math.sqrt(dh)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    D = jnp.sum(dof * o.astype(jnp.float32), axis=-1)          # (BH, S)
+
+    qt = _tiles(qf, cq)                                        # (BH,nq,cq,dh)
+    dot = _tiles(dof, cq)
+    lt = lse.reshape(BH, S // cq, cq)
+    Dt = D.reshape(BH, S // cq, cq)
+    kt = _tiles(kf, ckv)                                       # (BHkv,nkv,..)
+    vt = _tiles(vf, ckv)
+    nq, nkv = S // cq, S // ckv
+
+    def s_tile(qb, kb, qi, kj):
+        # qb: (BH, cq, dh) kb: (BHkv, ckv, dh) → (BH, cq, ckv)
+        kbr = jnp.repeat(kb, G, axis=0)
+        s = jnp.einsum("bqd,bkd->bqk", qb, kbr,
+                       preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * cq + jnp.arange(cq)
+            kpos = kj * ckv + jnp.arange(ckv)
+            s = jnp.where((kpos[None, :] <= qpos[:, None])[None], s, NEG_INF)
+        return s
+
+    # pass 1: dQ — vmap over q tiles, scan over kv tiles
+    def dq_tile(qi, qb, dob, lseb, Db):
+        def kv_step(acc, kj):
+            s = s_tile(qb, kt[:, kj], qi, kj)
+            p = jnp.exp(s - lseb[..., None])
+            vbr = jnp.repeat(vt[:, kj], G, axis=0)
+            dp = jnp.einsum("bqd,bkd->bqk", dob, vbr)
+            ds = p * (dp - Db[..., None])
+            kbr = jnp.repeat(kt[:, kj], G, axis=0)
+            return acc + jnp.einsum("bqk,bkd->bqd", ds, kbr), None
+
+        acc0 = jnp.zeros((BH, cq, dh), jnp.float32)
+        acc, _ = jax.lax.scan(kv_step, acc0, jnp.arange(nkv))
+        return acc * scale
+
+    dq = jax.vmap(dq_tile, in_axes=(0, 1, 1, 1, 1), out_axes=1)(
+        jnp.arange(nq), qt, dot, lt, Dt)                       # (BH,nq,cq,dh)
+    dq = dq.reshape(BH, S, dh).astype(q.dtype)
+
+    # pass 2: dK, dV — vmap over kv tiles, scan over q tiles
+    def dkv_tile(kj, kb, vb):
+        def q_step(carry, qi):
+            dk, dv = carry
+            s = s_tile(qt[:, qi], kb, qi, kj)
+            p = jnp.exp(s - lt[:, qi][..., None])              # (BH,cq,ckv)
+            dob = dot[:, qi]
+            vbr = jnp.repeat(vb, G, axis=0)
+            dp = jnp.einsum("bqd,bkd->bqk", dob, vbr)
+            ds = p * (dp - Dt[:, qi][..., None])
+            dvc = jnp.einsum("bqk,bqd->bkd", p, dob)           # (BH,ckv,dh)
+            dkc = jnp.einsum("bqk,bqd->bkd", ds, qt[:, qi])
+            # sum GQA group back to kv heads
+            dvc = dvc.reshape(BHkv, G, ckv, dh).sum(1)
+            dkc = dkc.reshape(BHkv, G, ckv, dh).sum(1)
+            return (dk + dkc, dv + dvc), None
+
+        z = jnp.zeros((BHkv, ckv, dh), jnp.float32)
+        (dk, dv), _ = jax.lax.scan(q_step, (z, z), jnp.arange(nq))
+        return dk, dv           # qt already carries the 1/√dh scale
+
+    dk, dv = jax.vmap(dkv_tile, in_axes=(0, 1, 1), out_axes=1)(
+        jnp.arange(nkv), kt, vt)
+    dk = dk.reshape(BHkv, S, dh).astype(k.dtype)
+    dv = dv.reshape(BHkv, S, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "cq", "ckv"))
+def flash_attention_bshd(q, k, v, *, causal: bool = True, cq: int = 256,
+                         ckv: int = 256):
+    """Convenience layout wrapper: q (B, S, H, dh), k/v (B, S, Hkv, dh)."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, dh)
+    o = flash_attention(qf, kf, vf, causal, cq, ckv)
+    return o.reshape(B, H, S, dh).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel: exact softmax attention
+plus the log-sum-exp, in f32."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_ref(q, k, v, *, causal: bool = True):
+    """q: (BH, S, dh); k, v: (BHkv, S, dh).  Returns (o, lse)."""
+    BH, S, dh = q.shape
+    G = BH // k.shape[0]
+    kr = jnp.repeat(k, G, axis=0).astype(jnp.float32)
+    vr = jnp.repeat(v, G, axis=0).astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), kr) / jnp.sqrt(
+        jnp.float32(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bqk,bkd->bqd", p / l, vr)
+    lse = (m + jnp.log(l))[..., 0]
+    return o.astype(q.dtype), lse

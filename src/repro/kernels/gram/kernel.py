@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: Gram matrix K = X Xᵀ for the Fast-DS-FD sketch buffer.
+
+This is Algorithm 3 line 10 (``K = Ĉ Ĉᵀ``) — the dominant dense-matmul
+hot-spot of the paper's optimized update.  X is the (m, d) sketch buffer with
+m = 2ℓ ≤ 512 rows and d up to tens of thousands; K is tiny (m × m) but X is
+long, so the kernel streams X through VMEM in d-blocks and accumulates K in a
+VMEM scratch accumulator (f32), writing it out on the final grid step.
+
+Tiling: block (m, bd) with bd a multiple of 128 (lane width) — one MXU-shaped
+operand per grid step; the m×m accumulator stays resident in VMEM for the
+whole sweep (m=512 ⇒ 1 MiB f32 ≪ VMEM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gram_kernel(x_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xb = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        xb, xb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gram_pallas(x: jax.Array, *, block_d: int = 512,
+                interpret: bool = False) -> jax.Array:
+    """K = x @ x.T.  x: (m, d) with m mult of 8 and d mult of block_d
+    (ops.py pads).  Returns (m, m) in x.dtype."""
+    m, d = x.shape
+    assert d % block_d == 0, (d, block_d)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(d // block_d,),
+        in_specs=[pl.BlockSpec((m, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), x.dtype),
+        scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,34 @@
+"""jit'd public wrapper for the gram kernel (handles padding + backend)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gram.kernel import gram_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram(x: jax.Array, *, block_d: int = 512,
+         interpret: bool | None = None) -> jax.Array:
+    """K = x @ x.T via the Pallas kernel.  Zero-padding rows/cols is exact
+    for a Gram matrix (padded dims contribute 0)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = x.shape[0]
+    bd = min(block_d, max(128, 128 * ((x.shape[1] + 127) // 128)))
+    xp = _pad_to(_pad_to(x, 0, 8), 1, bd)
+    out = gram_pallas(xp, block_d=bd, interpret=interpret)
+    return out[:m, :m]

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused power iteration for the top eigenpair of the
+small PSD Gram matrix K (probabilistic Fast-DS-FD, paper §3.1: "iterative
+eigenvalue methods like Power Iteration could be used to reduce the time
+complexity of SVD").
+
+K is (m, m) with m = 2ℓ ≤ 512 — it fits VMEM whole, so the entire iteration
+runs on-chip with zero HBM traffic after the initial load: this is the point
+of fusing (XLA would bounce u through HBM between iterations when the loop
+lives outside the kernel).
+
+Outputs: λ̂ (1,1) and û (1, m).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power_kernel(k_ref, lam_ref, u_ref, *, iters: int):
+    K = k_ref[...].astype(jnp.float32)          # (m, m) resident in VMEM
+    m = K.shape[0]
+    u0 = jnp.full((1, m), 1.0 / jnp.sqrt(jnp.float32(m)), jnp.float32)
+
+    def body(_, u):
+        w = jax.lax.dot_general(u, K, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        nrm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-30))
+        return w / nrm
+
+    u = jax.lax.fori_loop(0, iters, body, u0)
+    Ku = jax.lax.dot_general(u, K, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    lam = jnp.sum(Ku * u)
+    lam_ref[...] = jnp.full((1, 1), lam, lam_ref.dtype)
+    u_ref[...] = u.astype(u_ref.dtype)
+
+
+def power_iter_pallas(K: jax.Array, *, iters: int = 24,
+                      interpret: bool = False):
+    m = K.shape[0]
+    kern = functools.partial(_power_kernel, iters=iters)
+    lam, u = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, m), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, m), jnp.float32)],
+        interpret=interpret,
+    )(K)
+    return lam, u

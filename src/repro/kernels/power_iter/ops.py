@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the fused power-iteration kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.power_iter.kernel import power_iter_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def power_iter(K: jax.Array, *, iters: int = 24,
+               interpret: bool | None = None):
+    """Top eigenpair (λ, u) of a PSD matrix.  Returns λ scalar and u (m,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m = K.shape[0]
+    pad = (-m) % 8
+    Kp = jnp.pad(K, ((0, pad), (0, pad)))  # zero-padding keeps eigenpairs
+    lam, u = power_iter_pallas(Kp, iters=iters, interpret=interpret)
+    return lam[0, 0], u[0, :m]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the power-iteration kernel (identical math)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def power_iter_ref(K: jax.Array, iters: int = 24):
+    m = K.shape[0]
+    Kf = K.astype(jnp.float32)
+    u = jnp.full((m,), 1.0 / jnp.sqrt(jnp.float32(m)), jnp.float32)
+
+    def body(_, u):
+        w = Kf @ u
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-15)
+
+    u = jax.lax.fori_loop(0, iters, body, u)
+    lam = u @ (Kf @ u)
+    return lam, u

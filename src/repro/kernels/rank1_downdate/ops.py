@@ -1,0 +1,24 @@
+"""jit'd public wrapper for the rank-1 downdate kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rank1_downdate.kernel import rank1_downdate_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def rank1_downdate(D: jax.Array, v: jax.Array, *, block_d: int = 512,
+                   interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, d = D.shape
+    bd = min(block_d, max(128, 128 * ((d + 127) // 128)))
+    pad_m, pad_d = (-m) % 8, (-d) % bd
+    Dp = jnp.pad(D, ((0, pad_m), (0, pad_d)))
+    vp = jnp.pad(v, (0, pad_d))
+    out = rank1_downdate_pallas(Dp, vp, block_d=bd, interpret=interpret)
+    return out[:m, :d]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the rank-1 downdate kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rank1_downdate_ref(D: jax.Array, v: jax.Array) -> jax.Array:
+    Df = D.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    return (Df - (Df @ vf)[:, None] * vf[None, :]).astype(D.dtype)

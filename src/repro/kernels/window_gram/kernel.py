@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: exact window covariance G = AᵀA for a (n, d) row block.
+
+Used by the benchmark harness (ground truth for every error figure) and by
+the query-time merge when an exact small-window Gram is cheaper than an SVD.
+Streams A through VMEM in n-blocks, accumulating the (d, d) Gram in VMEM
+scratch — one HBM pass over A, no (n, d)ᵀ(n, d) materialization in HBM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wgram_kernel(a_ref, o_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ab = a_ref[...].astype(jnp.float32)          # (bn, d)
+    acc_ref[...] += jax.lax.dot_general(
+        ab, ab, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)       # (d, d)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def window_gram_pallas(A: jax.Array, *, block_n: int = 256,
+                       interpret: bool = False) -> jax.Array:
+    n, d = A.shape
+    assert n % block_n == 0
+    return pl.pallas_call(
+        _wgram_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(A)

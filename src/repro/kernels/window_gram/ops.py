@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the window-gram kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.window_gram.kernel import window_gram_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def window_gram(A: jax.Array, *, block_n: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = A.shape
+    bn = min(block_n, max(8, 8 * ((n + 7) // 8)))
+    pad_n, pad_d = (-n) % bn, (-d) % 128
+    Ap = jnp.pad(A, ((0, pad_n), (0, pad_d)))
+    out = window_gram_pallas(Ap, block_n=bn, interpret=interpret)
+    return out[:d, :d]

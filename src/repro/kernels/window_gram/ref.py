@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the window-gram kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def window_gram_ref(A: jax.Array) -> jax.Array:
+    Af = A.astype(jnp.float32)
+    return Af.T @ Af

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh, prove the sharding is coherent, and
+record the roofline inputs (memory analysis, cost analysis, loop-adjusted
+HLO flops / HBM bytes / collective bytes).
+
+The two lines above MUST stay first: jax locks the device count on first
+backend init, and the 512 placeholder host devices exist only for this
+entry point (smoke tests and benches see 1 device).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all                 # 16×16 pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod     # 2×16×16
+
+Artifacts: one JSON per cell under benchmarks/artifacts/dryrun/<mesh>/.
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES, all_configs,
+                                get_config, shape_cells)
+from repro.launch import hlo
+from repro.launch.flops import model_flops
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.models.params import (abstract_params, count_params, param_pspecs)
+from repro.parallel.sharding import axis_rules, make_rules, to_pspec
+from repro.serve.serve_step import build_decode_step, build_prefill_step
+from repro.train.optimizer import get_optimizer, opt_state_pspecs
+from repro.train.train_step import (TrainStepConfig, auto_microbatches,
+                                    build_train_step)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+# Large-scale policy thresholds (DESIGN.md §5)
+FSDP_BYTES_PER_CHIP = 4e9          # bf16 params/chip above this → FSDP
+ADAFACTOR_PARAMS = 50e9            # above → factored second moments
+NO_MOMENTUM_PARAMS = 200e9         # above → drop bf16 momentum too
+BF16_ACCUM_PARAMS = 50e9           # above → bf16 grad accumulation
+
+
+def _axis_prod(mesh, names) -> int:
+    n = 1
+    for a in names:
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def _fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop spec entries that do not divide the dimension they shard."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, p in zip(shape, parts):
+        if p is None:
+            out.append(None)
+            continue
+        axes = p if isinstance(p, (tuple, list)) else (p,)
+        n = _axis_prod(mesh, axes)
+        out.append(p if (n and dim % n == 0) else None)
+    return P(*out)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and not hasattr(x, "_fields") and \
+        all(isinstance(e, (str, type(None), tuple)) for e in x)
+
+
+def batch_shardings(cfg, shape, mesh, rules, specs) -> Dict:
+    axes = api.batch_axes(cfg, shape)
+    return jax.tree.map(
+        lambda ax, sds: NamedSharding(
+            mesh, _fit_spec(to_pspec(ax, rules), sds.shape, mesh)),
+        axes, specs, is_leaf=_is_axes_leaf)
+
+
+def scale_policy(cfg: ModelConfig, mesh) -> Dict:
+    defs = api.param_defs(cfg)
+    nparams = count_params(defs)
+    msize = _axis_prod(mesh, ("model",))
+    fsdp = nparams * 2 / max(msize, 1) > FSDP_BYTES_PER_CHIP
+    opt_name = "adafactor" if nparams > ADAFACTOR_PARAMS else "adamw"
+    opt_kw = {"momentum": 0.0} if nparams > NO_MOMENTUM_PARAMS else {}
+    accum = "bfloat16" if nparams > BF16_ACCUM_PARAMS else "float32"
+    return {"nparams": nparams, "fsdp": fsdp, "opt_name": opt_name,
+            "opt_kw": opt_kw, "accum": accum}
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               overrides: Optional[Dict] = None):
+    """Lower one (arch × shape) cell on ``mesh``.  Returns (lowered, meta)."""
+    pol = scale_policy(cfg, mesh)
+    if overrides:
+        pol.update({k: v for k, v in overrides.items() if k in pol})
+    rules = make_rules(mesh, api.sharding_dims(cfg), fsdp=pol["fsdp"])
+    meta = {"rules": {k: str(v) for k, v in rules.items()},
+            "nparams": pol["nparams"], "fsdp": pol["fsdp"],
+            "optimizer": pol["opt_name"]}
+
+    with mesh, axis_rules(mesh, rules):
+        defs = api.param_defs(cfg)
+        aparams = abstract_params(defs, jnp.dtype(cfg.param_dtype))
+        pspecs = param_pspecs(defs, rules)
+        param_ns = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                                is_leaf=lambda x: isinstance(x, P))
+        batch = api.input_specs(cfg, shape)
+        scalar_ns = NamedSharding(mesh, P())
+
+        if shape.kind == "train":
+            opt = get_optimizer(pol["opt_name"], **pol["opt_kw"])
+            astate = jax.eval_shape(opt.init, aparams)
+            opt_specs = opt_state_pspecs(opt, pspecs, aparams, astate)
+            opt_ns = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                  opt_specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            data_shards = _axis_prod(mesh, ("pod", "data"))
+            n_micro = (overrides or {}).get("n_micro") or \
+                auto_microbatches(cfg, shape, data_shards,
+                                  fsdp=pol["fsdp"],
+                                  nparams=pol["nparams"])
+            tsc = TrainStepConfig(n_micro=n_micro, accum_dtype=pol["accum"])
+            meta.update({"n_micro": n_micro, "accum": pol["accum"]})
+            fn = build_train_step(cfg, opt, tsc)
+            bshard = batch_shardings(cfg, shape, mesh, rules, batch)
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(param_ns, opt_ns, scalar_ns, bshard),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(aparams, astate, step_sds, batch)
+        elif shape.kind == "prefill":
+            fn = build_prefill_step(cfg)
+            bshard = batch_shardings(cfg, shape, mesh, rules, batch)
+            jitted = jax.jit(fn, in_shardings=(param_ns, bshard))
+            lowered = jitted.lower(aparams, batch)
+        else:  # decode
+            fn = build_decode_step(cfg)
+            bshard = batch_shardings(cfg, shape, mesh, rules, batch)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(param_ns, bshard["tokens"], bshard["caches"]),
+                donate_argnums=(2,))
+            lowered = jitted.lower(aparams, batch["tokens"],
+                                   batch["caches"])
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: Optional[Dict] = None, save: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, overrides)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+    }
+    mem_d["peak_per_device"] = (mem_d["argument_bytes"]
+                                + mem_d["output_bytes"]
+                                + mem_d["temp_bytes"]
+                                - mem_d["alias_bytes"])
+    cost = compiled.cost_analysis() or {}
+    stats = hlo.analyze(compiled.as_text())
+    terms = hlo.roofline_terms(stats, chips, cost=None, memory=None)
+
+    mf = model_flops(cfg, shape)
+
+    # Achievable ideal for this cell: compute at peak on the model's useful
+    # flops, or the must-move bytes (params for every step kind; optimizer
+    # state r/w for train; KV/state caches for decode/prefill), whichever
+    # binds.  roofline_fraction = ideal / compiled-step bound — "how close
+    # is the compiled program to the best this hardware could do".
+    def tree_bytes(t):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(t)
+                   if hasattr(x, "size"))
+
+    with mesh:
+        defs = api.param_defs(cfg)
+        p_bytes = tree_bytes(abstract_params(defs,
+                                             jnp.dtype(cfg.param_dtype)))
+        cache_bytes = 0
+        if shape.kind != "train":
+            cache_bytes = tree_bytes(
+                api.input_specs(cfg, shape).get("caches", ())) or \
+                tree_bytes(jax.eval_shape(
+                    lambda: api.init_cache(cfg, shape.global_batch,
+                                           shape.seq_len)))
+    if shape.kind == "train":
+        opt_bytes = 2 * p_bytes          # fp32-ish stats, read+write ≈ 2P
+        min_bytes = 3 * p_bytes + 2 * opt_bytes
+    elif shape.kind == "prefill":
+        min_bytes = p_bytes + cache_bytes
+    else:
+        min_bytes = p_bytes + cache_bytes
+    ideal_s = max(mf / hlo.PEAK_FLOPS / chips,
+                  min_bytes / chips / hlo.HBM_BW)
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        **meta,
+        "memory": mem_d,
+        "xla_cost_flops_body_once": float(cost.get("flops", 0.0)),
+        "hlo": {
+            "matmul_flops_per_device": stats.matmul_flops,
+            "hbm_bytes_per_device": stats.hbm_bytes,
+            "collective_bytes_per_device": stats.collective_bytes,
+            "collective_counts": stats.collective_counts,
+            "collective_by_op": stats.collective_by_op,
+            "loop_trips": dict(sorted(stats.loop_trips.items())),
+        },
+        "roofline": {
+            "compute_s": terms["compute_s"],
+            "memory_s": terms["memory_s"],
+            "collective_s": terms["collective_s"],
+            "dominant": terms["dominant"],
+            "model_flops_total": mf,
+            "hlo_flops_total": stats.matmul_flops * chips,
+            "useful_ratio": mf / max(stats.matmul_flops * chips, 1.0),
+            "step_time_bound_s": max(terms["compute_s"], terms["memory_s"],
+                                     terms["collective_s"]),
+            "ideal_s": ideal_s,
+            "min_bytes_per_device": min_bytes / chips,
+            "compute_fraction": (mf / hlo.PEAK_FLOPS / chips)
+            / max(terms["compute_s"], terms["memory_s"],
+                  terms["collective_s"], 1e-30),
+            "roofline_fraction": ideal_s
+            / max(terms["compute_s"], terms["memory_s"],
+                  terms["collective_s"], 1e-30),
+        },
+        "lower_s": t1 - t0, "compile_s": t2 - t1,
+    }
+    if save:
+        sub = os.path.join(ART_DIR, rec["mesh"])
+        os.makedirs(sub, exist_ok=True)
+        path = os.path.join(sub, f"{arch}__{shape_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        rec["artifact"] = os.path.abspath(path)
+    return rec
+
+
+def _fmt(rec: Dict) -> str:
+    r = rec["roofline"]
+    return (f"{rec['arch']:>18s} × {rec['shape']:<12s} [{rec['mesh']}] "
+            f"mem/dev={rec['memory']['peak_per_device']/1e9:6.2f}GB "
+            f"C={r['compute_s']*1e3:9.2f}ms M={r['memory_s']*1e3:9.2f}ms "
+            f"L={r['collective_s']*1e3:9.2f}ms dom={r['dominant']:<10s} "
+            f"MFU*={r['roofline_fraction']*100:5.1f}% "
+            f"(compile {rec['compile_s']:.0f}s)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--no-save", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in all_configs():
+            for sh in shape_cells(arch):
+                cells.append((arch, sh.name))
+    else:
+        assert args.arch, "--arch required without --all"
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in shape_cells(args.arch)])
+        cells = [(args.arch, s) for s in shapes]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = {"n_micro": args.n_micro} if args.n_micro else None
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            try:
+                rec = run_cell(arch, shape, multi_pod, overrides,
+                               save=not args.no_save)
+                print(_fmt(rec), flush=True)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape, multi_pod, repr(e)))
+                print(f"FAIL {arch} × {shape} multi_pod={multi_pod}: {e}",
+                      flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print("all dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

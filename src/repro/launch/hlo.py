@@ -1,0 +1,473 @@
+"""Loop-aware analysis of post-partitioning HLO text.
+
+``compiled.cost_analysis()`` visits every while-loop body **once** — a
+scan-over-layers transformer therefore under-counts FLOPs by ~n_layers×.
+This module re-derives roofline inputs directly from ``compiled.as_text()``:
+
+* ``loop multipliers`` — each ``while`` op's trip count is recovered from the
+  s32 constant in its condition computation (scan lowers to exactly that
+  form); nested loops multiply (microbatch scan × layer scan × kv-chunk
+  scan are all captured).
+* ``matmul_flops``    — 2 · |out| · |contracted| per ``dot``, loop-adjusted.
+  This also *sees remat*: the recomputed forward dots inside the backward
+  while body are counted again, so the "useful/compiled" ratio in §Roofline
+  genuinely measures recompute waste.
+* ``hbm_bytes``       — Σ (operand + output bytes) over top-level
+  instructions of each executed computation, loop-adjusted.  Post-fusion,
+  instruction boundaries are exactly the HBM round-trips (fusion internals
+  live in registers/VMEM), so this is the memory-roofline numerator.
+* ``collective_bytes`` — per-device link traffic per collective with ring
+  cost models (all-reduce 2·(n−1)/n, all-gather/reduce-scatter (n−1)/n …),
+  loop-adjusted, plus the op-count schedule for EXPERIMENTS.md §Dry-run.
+
+The parser is deliberately tolerant: unknown ops contribute bytes but no
+flops; unparseable trip counts default to 1 (under-counting, never over).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "u4": 1, "s4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ("", ())
+    dims = tuple(int(d) for d in m.group(2).split(",") if d)
+    return (m.group(1), dims)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    opseg: str
+    attrs: str
+    root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]          # param name -> type str
+    instrs: List[Instr]
+
+
+_COMP_HEAD = re.compile(
+    r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\(.*\))\s*->\s*(.+?)\s*\{\s*$")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))")
+
+
+def _split_type_op(rhs: str) -> Tuple[str, str, str]:
+    """Split '  f32[4,6]{1,0} dot(%a, %b), attrs' -> (type, opcode, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):                        # tuple type
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest = rhs[: i + 1], rhs[i + 1:].strip()
+    else:
+        m = re.match(r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+(.*)$", rhs)
+        if not m:
+            return "", "", rhs
+        type_str, rest = m.group(1), m.group(2)
+    m = re.match(r"^([\w\-]+)\((.*)$", rest)
+    if not m:
+        return type_str, "", rest
+    opcode, tail = m.group(1), m.group(2)
+    # split operand segment (up to matching close paren) from attrs
+    depth, i = 1, 0
+    for i, ch in enumerate(tail):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    return type_str, opcode, tail[:i] + "||" + tail[i + 1:]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_HEAD.match(line.strip())
+        if m and ("=" not in line.split("(")[0]):
+            params = dict(_PARAM_RE.findall(m.group(3)))
+            cur = Computation(m.group(2), params, [])
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        s = line.strip()
+        if cur is None or not s or s == "}":
+            if s == "}":
+                cur = None
+            continue
+        root = s.startswith("ROOT ")
+        if root:
+            s = s[5:]
+        if not s.startswith("%") or " = " not in s:
+            continue
+        name, rhs = s.split(" = ", 1)
+        type_str, opcode, seg = _split_type_op(rhs)
+        if "||" in seg:
+            opseg, attrs = seg.split("||", 1)
+        else:
+            opseg, attrs = seg, ""
+        operands = re.findall(r"%([\w.\-]+)", opseg)
+        cur.instrs.append(Instr(name.lstrip("%"), type_str, opcode,
+                                operands, opseg, attrs, root))
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# Loop trip counts
+# ---------------------------------------------------------------------------
+
+
+def _const_value(ins: Instr) -> Optional[int]:
+    m = re.match(r"^\s*(-?\d+)\s*$", ins.opseg) if ins.opseg else None
+    return int(m.group(1)) if m else None
+
+
+def trip_counts(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """while-op body/condition computation name -> trip count."""
+    trips: Dict[str, int] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode != "while":
+                continue
+            mcond = re.search(r"condition=%([\w.\-]+)", ins.attrs)
+            mbody = re.search(r"body=%([\w.\-]+)", ins.attrs)
+            if not (mcond and mbody):
+                continue
+            cond = comps.get(mcond.group(1))
+            trip = 1
+            if cond is not None:
+                # the constant operand of the ROOT compare, else the single
+                # positive s32 scalar constant
+                vals = []
+                for cins in cond.instrs:
+                    if cins.opcode == "constant" and \
+                            cins.type_str.startswith("s32[]"):
+                        v = _const_value(cins)
+                        if v is not None and v > 0:
+                            vals.append(v)
+                if len(vals) >= 1:
+                    trip = max(vals)
+            trips[mbody.group(1)] = trip
+            trips[mcond.group(1)] = trip
+    return trips
+
+
+# ---------------------------------------------------------------------------
+# Recursive walkers
+# ---------------------------------------------------------------------------
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    _, out_dims = _first_shape(ins.type_str)
+    out = 1
+    for d in out_dims:
+        out *= d
+    lhs_ts = shapes.get(ins.operands[0], "") if ins.operands else ""
+    _, lhs_dims = _first_shape(lhs_ts)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contracted = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * out * contracted
+
+
+def _group_size(attrs: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _collective_link_bytes(ins: Instr, shapes: Dict[str, str]) -> float:
+    """Per-device bytes over ICI links for one collective (ring model)."""
+    out_b = _shape_bytes(ins.type_str)
+    in_b = sum(_shape_bytes(shapes.get(o, "")) for o in ins.operands)
+    n = max(_group_size(ins.attrs), 1)
+    op = ins.opcode.replace("-start", "")
+    if op == "all-reduce":
+        return 2.0 * out_b * (n - 1) / max(n, 1)
+    if op == "all-gather":
+        return out_b * (n - 1) / max(n, 1)
+    if op == "reduce-scatter":
+        return in_b * (n - 1) / max(n, 1)
+    if op == "all-to-all":
+        return out_b * (n - 1) / max(n, 1)
+    if op == "collective-permute":
+        return float(out_b)
+    return 0.0
+
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "bitcast-convert", "after-all", "partition-id",
+               "replica-id"}
+
+
+@dataclasses.dataclass
+class HLOStats:
+    matmul_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    loop_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_calls: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(text: str) -> HLOStats:
+    comps, entry = parse_module(text)
+    trips = trip_counts(comps)
+    stats = HLOStats(loop_trips={k: v for k, v in trips.items()
+                                 if not k.endswith("_spmd_cond")})
+
+    # fusions/reductions called via calls=/to_apply= never contain
+    # collectives or HBM boundaries; dots can hide inside wrapped fusions.
+    def fusion_flops(comp_name: str, shapes: Dict[str, str]) -> float:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        local = dict(comp.params)
+        fl = 0.0
+        for ins in comp.instrs:
+            local[ins.name] = ins.type_str
+            if ins.opcode == "dot":
+                fl += _dot_flops(ins, local)
+            elif ins.opcode == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+                if m:
+                    fl += fusion_flops(m.group(1), local)
+        return fl
+
+    def walk(comp_name: str, mult: float) -> None:
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        shapes: Dict[str, str] = dict(comp.params)
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.type_str
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                mbody = re.search(r"body=%([\w.\-]+)", ins.attrs)
+                if mbody:
+                    walk(mbody.group(1), mult * trips.get(mbody.group(1), 1))
+                continue
+            if op in ("call", "async-start"):
+                m = re.search(r"(?:to_apply|calls)=%([\w.\-]+)", ins.attrs)
+                if m:
+                    walk(m.group(1), mult)
+            if op == "conditional":
+                for m in re.finditer(
+                        r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%([\w.\-]+)",
+                        ins.attrs):
+                    walk(m.group(1), mult)
+            if op == "dot":
+                fl = _dot_flops(ins, shapes)
+                stats.matmul_flops += mult * fl
+                stats.dot_calls += mult
+            elif op == "fusion":
+                m = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+                if m:
+                    fl = fusion_flops(m.group(1), shapes)
+                    if fl:
+                        stats.matmul_flops += mult * fl
+                        stats.dot_calls += mult
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                b = _collective_link_bytes(ins, shapes)
+                stats.collective_bytes += mult * b
+                stats.collective_counts[base] = (
+                    stats.collective_counts.get(base, 0) + 1)
+                stats.collective_by_op[base] = (
+                    stats.collective_by_op.get(base, 0.0) + mult * b)
+            if op not in _SKIP_BYTES and not op.endswith("-done"):
+                stats.hbm_bytes += mult * _instr_hbm_bytes(ins, shapes,
+                                                           comps)
+    if entry:
+        walk(entry, 1.0)
+    return stats
+
+
+_LAYOUT_OPS = {"convert", "bitcast", "bitcast-convert", "transpose", "copy",
+               "reshape", "dynamic-slice", "broadcast", "parameter",
+               "constant", "iota", "slice"}
+
+
+def _instr_hbm_bytes(ins: Instr, shapes: Dict[str, str],
+                     comps: Dict[str, Computation]) -> float:
+    """HBM traffic model for one top-level instruction (TPU-oriented):
+
+    * fusion boundaries are HBM round-trips, BUT a fusion parameter whose
+      only uses are dynamic-slice reads only the slices (scan xs/weight
+      stacks would otherwise be charged in full per layer);
+    * a root dynamic-update-slice is in-place (scan ys stacking / KV-cache
+      writes): traffic = update region r+w, not the whole buffer;
+    * pure layout/upcast fusions (convert/transpose/copy-only — the
+      bf16→f32 operand staging XLA:CPU inserts around dots, which the TPU
+      MXU does not need) are skipped.
+    """
+    out_b = _shape_bytes(ins.type_str)
+    op_bytes = [_shape_bytes(shapes.get(o, "")) for o in ins.operands]
+    if ins.opcode == "dynamic-update-slice":
+        upd = (_shape_bytes(shapes.get(ins.operands[1], ""))
+               if len(ins.operands) > 1 else 0.0)
+        return 3.0 * upd
+    if ins.opcode != "fusion":
+        return out_b + sum(op_bytes)
+
+    m = re.search(r"calls=%([\w.\-]+)", ins.attrs)
+    comp = comps.get(m.group(1)) if m else None
+    if comp is None:
+        return out_b + sum(op_bytes)
+    local: Dict[str, str] = dict(comp.params)
+    for cins in comp.instrs:
+        local[cins.name] = cins.type_str
+
+    # pure layout/upcast fusion → no HBM cost on the TPU target
+    if all(c.opcode in _LAYOUT_OPS for c in comp.instrs):
+        return 0.0
+
+    # slice-aware parameter reads
+    reads = 0.0
+    for pname, ptype in comp.params.items():
+        uses = [c for c in comp.instrs if pname in c.operands]
+        if uses and all(c.opcode == "dynamic-slice" for c in uses):
+            reads += sum(_shape_bytes(c.type_str) for c in uses)
+        else:
+            reads += _shape_bytes(ptype)
+
+    by_name = {c.name: c for c in comp.instrs}
+
+    def _through_layout(name: str) -> Optional[Instr]:
+        seen = 0
+        c = by_name.get(name)
+        while c is not None and seen < 8 and c.opcode in (
+                "convert", "bitcast", "copy", "reshape", "transpose"):
+            if not c.operands:
+                break
+            c = by_name.get(c.operands[0])
+            seen += 1
+        return c
+
+    def _param_source(name: str) -> Optional[str]:
+        cur = name
+        for _ in range(8):
+            if cur in comp.params:
+                return cur
+            c = by_name.get(cur)
+            if c is None or not c.operands or c.opcode not in (
+                    "convert", "bitcast", "copy", "reshape", "transpose"):
+                return None
+            cur = c.operands[0]
+        return None
+
+    root = next((c for c in comp.instrs if c.root),
+                comp.instrs[-1] if comp.instrs else None)
+    eff = _through_layout(root.name) if root is not None else None
+    if eff is not None and eff.opcode == "dynamic-update-slice":
+        upd_b = (_shape_bytes(local.get(eff.operands[1], ""))
+                 if len(eff.operands) > 1 else 0.0)
+        # drop the aliased big-buffer read (tracing its upcast chain back
+        # to the source parameter); charge r+w of the update region only
+        src = _param_source(eff.operands[0]) if eff.operands else None
+        if src is not None:
+            reads -= _shape_bytes(comp.params[src])
+        return max(reads, 0.0) + 2.0 * upd_b
+    return reads + out_b
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (TPU v5e constants from the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def roofline_terms(stats: HLOStats, chips: int,
+                   cost: Optional[Dict] = None,
+                   memory: Optional[Dict] = None) -> Dict:
+    """The three §Roofline terms, in seconds.
+
+    HLO flops / bytes / collective bytes from ``analyze`` are *per-device*
+    (the SPMD module is per-partition), so terms are per-device time —
+    equivalently  total/(chips × peak)  as the assignment formulates it.
+    """
+    compute_t = stats.matmul_flops / PEAK_FLOPS
+    memory_t = stats.hbm_bytes / HBM_BW
+    coll_t = stats.collective_bytes / LINK_BW
+    dominant = max(
+        (("compute", compute_t), ("memory", memory_t),
+         ("collective", coll_t)), key=lambda kv: kv[1])[0]
+    out = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": coll_t,
+        "dominant": dominant,
+        "per_device_flops": stats.matmul_flops,
+        "per_device_hbm_bytes": stats.hbm_bytes,
+        "per_device_collective_bytes": stats.collective_bytes,
+        "total_flops": stats.matmul_flops * chips,
+        "chips": chips,
+    }
+    if cost:
+        out["xla_cost_flops_once"] = cost.get("flops", 0.0)
+        out["xla_cost_bytes_once"] = cost.get("bytes accessed", 0.0)
+    if memory:
+        out["memory_analysis"] = memory
+    return out

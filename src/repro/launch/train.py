@@ -1,0 +1,80 @@
+"""Training launcher: ``PYTHONPATH=src python -m repro.launch.train
+--arch smollm-135m --steps 100 [--reduced] [--sketch] [--compress]``.
+
+On this CPU container ``--reduced`` (default) trains the smoke-scale
+config; on a pod the same entry point drives the full config on the
+production mesh (``--mesh pod|multipod``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real pod)")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "pod", "multipod"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--sketch", action="store_true",
+                    help="enable the DS-FD gradient monitor")
+    ap.add_argument("--compress", action="store_true",
+                    help="enable FD gradient compression (EF)")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor", "sgdm", "sketchy"])
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    from repro.configs.base import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.loop import LoopConfig, train
+    from repro.train.train_step import TrainStepConfig
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    if args.mesh == "host":
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+
+    tsc_kw = {}
+    if args.sketch:
+        from repro.sketch import SketchConfig
+        tsc_kw["sketch"] = SketchConfig(d=128, eps=0.125, window=128)
+    if args.compress:
+        from repro.sketch import CompressConfig
+        tsc_kw["compress"] = CompressConfig(rank=8, eps=0.125, window=32,
+                                            min_size=4096)
+    opt = None
+    if args.optimizer == "sketchy":
+        from repro.sketch import SketchyConfig, sketchy_dsfd
+        opt = sketchy_dsfd(SketchyConfig())
+    elif args.optimizer != "adamw":
+        from repro.train.optimizer import get_optimizer
+        opt = get_optimizer(args.optimizer)
+
+    res = train(cfg, mesh,
+                loop=LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir),
+                tsc=TrainStepConfig(**tsc_kw), opt=opt,
+                seq_len=args.seq_len, global_batch=args.global_batch)
+    print(f"final loss {res['history'][-1]['loss']:.4f} | "
+          f"{res['steps_per_s']:.2f} steps/s | "
+          f"stragglers flagged: {res['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Unified model API: family dispatch + input_specs (ShapeDtypeStruct
+stand-ins for the allocation-free dry-run) + cache logical axes."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import transformer, whisper, mamba2, recurrentgemma
+from repro.models.layers.attention import KVCache
+from repro.models.layers.ssm import SSMCache
+from repro.models.layers.rglru import RGLRUCache
+
+_FAMILY = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "encdec": whisper, "ssm": mamba2, "hybrid": recurrentgemma,
+}
+
+
+def model_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def param_defs(cfg: ModelConfig):
+    return model_module(cfg).param_defs(cfg)
+
+
+def sharding_dims(cfg: ModelConfig) -> Dict[str, int]:
+    return model_module(cfg).sharding_dims(cfg)
+
+
+def forward_train(cfg, params, batch):
+    return model_module(cfg).forward_train(cfg, params, batch)
+
+
+def forward_prefill(cfg, params, batch):
+    return model_module(cfg).forward_prefill(cfg, params, batch)
+
+
+def forward_decode(cfg, params, tokens, caches):
+    return model_module(cfg).forward_decode(cfg, params, tokens, caches)
+
+
+def init_cache(cfg, batch, s_max, dtype=jnp.bfloat16):
+    return model_module(cfg).init_cache(cfg, batch, s_max, dtype)
+
+
+def abstract_cache(cfg, batch, s_max, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, s_max, dtype))
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins, no device allocation
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Model inputs for one (arch × shape) cell.
+
+    train:   {tokens, labels [, frames][, positions]}
+    prefill: {tokens [, frames][, positions]}
+    decode:  {tokens (B,1), caches (KV/state of length seq_len)}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.act_dtype)
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), act)
+        if cfg.family == "vlm":
+            specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), act)
+        if cfg.family == "vlm":
+            specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        return specs
+    # decode: one new token against an S-long cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "caches": abstract_cache(cfg, B, S, act)}
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for batches and caches (sharding of dry-run inputs)
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    axes = {"tokens": ("batch", "seq")}
+    if shape.kind == "train":
+        axes["labels"] = ("batch", "seq")
+    if cfg.family == "encdec":
+        axes["frames"] = ("batch", "frames", "embed")
+    if cfg.family == "vlm" and shape.kind != "decode":
+        axes["positions"] = ("batch", "seq", None)
+    if shape.kind == "decode":
+        axes = {"tokens": ("batch", None), "caches": cache_axes(cfg)}
+    return axes
+
+
+def _kv_axes(kv_logical="kv"):
+    # 'kv_seq' shards the cache sequence dim over 'model' when the KV heads
+    # don't divide it (see make_rules) — decode_attention is written so the
+    # softmax reduces over the sharded dim with tiny collectives.
+    return KVCache(k=(None, "batch", "kv_seq", kv_logical, None),
+                   v=(None, "batch", "kv_seq", kv_logical, None),
+                   length=(None, "batch"))
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _kv_axes()
+    if cfg.family == "encdec":
+        return whisper.WhisperCache(
+            self_kv=_kv_axes("heads"),
+            cross_k=(None, "batch", "frames", "heads", None),
+            cross_v=(None, "batch", "frames", "heads", None))
+    if cfg.family == "ssm":
+        return SSMCache(conv_x=(None, "batch", None, "inner"),
+                        conv_bc=(None, "batch", None, None),
+                        state=(None, "batch", "heads", None, None))
+    if cfg.family == "hybrid":
+        rec = RGLRUCache(h=(None, "batch", "lru"),
+                         conv=(None, "batch", None, "lru"))
+        return recurrentgemma.RGCache(
+            rec1=rec, rec2=rec, attn=_kv_axes(), tail=rec)
+    raise ValueError(cfg.family)

@@ -1,0 +1,268 @@
+"""Attention: GQA with chunked (flash-style, online-softmax) computation,
+causal / local-window / cross variants, and KV-cache decode.
+
+Pure JAX (lax.scan over KV blocks) — memory-efficient without a custom
+kernel, compact HLO (one scanned body per attention call), GSPMD shards the
+flat head axis over 'model' when divisible.  KV heads are repeated to the
+full head count *per chunk* (transient), so GQA caches stay at n_kv width
+while the compute shards over all H heads.  Block sizes are the first lever
+of the §Perf hillclimb.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, constrain_divisible
+
+NEG_INF = -1e30
+
+
+def _rep_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, window: int = 0,
+                      q_offset: jax.Array | int = 0,
+                      kv_valid_len: Optional[jax.Array] = None,
+                      chunk_q: int = 512, chunk_kv: int = 1024,
+                      ) -> jax.Array:
+    """Memory-efficient attention.
+
+    q: (B, Sq, H, dh);  k, v: (B, Skv, Hkv, dh);  H = Hkv·G.
+    ``q_offset``: absolute position of q[0] (decode / continued prefill).
+    ``window`` > 0: local attention (key position > query position − window).
+    ``kv_valid_len``: mask out cache slots ≥ this length (decode).
+    Returns (B, Sq, H, dh).
+    """
+    from repro.parallel.sharding import current_mesh, current_rules
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    scale = dh ** -0.5
+
+    cq = min(chunk_q, Sq)
+    # Sequence-parallel alignment: when 'seq_attn' shards the sequence over
+    # 'model', make the q-block axis coincide with the shard axis — each
+    # device then owns whole q blocks and no score tile ever crosses
+    # devices (misaligned blocks caused 3× all-gathers of the f32 tiles).
+    rules = current_rules()
+    mesh = current_mesh()
+    seq_par = False
+    if rules and rules.get("seq_attn") and mesh:
+        msz = mesh.shape.get("model", 1)
+        if msz > 1 and Sq % msz == 0 and Sq // msz >= 1:
+            cq = min(cq, Sq // msz)
+            if (Sq // msz) % cq == 0:
+                seq_par = True
+    ckv = min(chunk_kv, Skv)
+    pad_q = (-Sq) % cq
+    pad_kv = (-Skv) % ckv
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // cq, kp.shape[1] // ckv
+
+    qp = (qp * scale).reshape(B, nq, cq, H, dh)
+    kp = kp.reshape(B, nkv, ckv, Hkv, dh)
+    vp = vp.reshape(B, nkv, ckv, Hkv, dh)
+    if seq_par:
+        qp = constrain_divisible(qp, "batch", "seq_attn", None, None, None)
+
+    q_pos0 = jnp.asarray(q_offset, jnp.int32)
+    kv_len = (jnp.asarray(kv_valid_len, jnp.int32)
+              if kv_valid_len is not None else jnp.asarray(Skv, jnp.int32))
+
+    def q_block(qi, qblk):
+        # qblk: (B, cq, H, dh); online softmax over kv blocks
+        qpos = q_pos0 + qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kblk, vblk = inp
+            kblk = _rep_kv(kblk, G)                     # (B, ckv, H, dh)
+            vblk = _rep_kv(vblk, G)
+            kpos = ki * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            mask = jnp.broadcast_to(kpos[None, :] < kv_len, (cq, ckv))
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            if window:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, dh), jnp.float32)
+        # Remat each KV tile: without this, differentiating the scan stacks
+        # every (B, H, cq, ckv) score/probability tile as a saved residual
+        # (tens of GB at 4k²); with it the backward recomputes tiles and the
+        # residual is just the per-tile carry (flash-attention semantics).
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (jnp.arange(nkv), jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2)                  # (B, cq, H, dh)
+
+    if nq == 1:
+        out = q_block(jnp.asarray(0), qp[:, 0])[:, None]
+    elif seq_par:
+        # parallel q-block axis: vmap (not lax.map/scan — a scan over a
+        # sharded axis is sequential by construction, so GSPMD would gather
+        # every tile instead of placing one block per device)
+        out = jax.vmap(q_block)(jnp.arange(nq), jnp.moveaxis(qp, 1, 0))
+        out = constrain_divisible(out, "seq_attn", "batch",
+                                  None, None, None)
+        out = jnp.moveaxis(out, 0, 1)                   # (B, nq, cq, H, dh)
+    else:
+        out = jax.lax.map(lambda args: q_block(*args),
+                          (jnp.arange(nq), jnp.moveaxis(qp, 1, 0)))
+        out = jnp.moveaxis(out, 0, 1)                   # (B, nq, cq, H, dh)
+    out = out.reshape(B, nq * cq, H, dh)[:, :Sq].astype(q.dtype)
+    return constrain_divisible(out, "batch", "seq_attn", "heads", None)
+
+
+def full_attention(q, k, v, *, causal: bool, window: int = 0) -> jax.Array:
+    """Plain einsum attention for short sequences (encoder / smoke tests)."""
+    B, Sq, H, dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    kr, vr = _rep_kv(k, G), _rep_kv(v, G)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) * dh ** -0.5
+    if causal or window:
+        qpos = jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        mask = jnp.ones((Sq, Skv), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return out
+
+
+def attention_any(q, k, v, *, causal: bool, window: int = 0,
+                  q_offset=0, kv_valid_len=None,
+                  chunk_threshold: int = 2048,
+                  chunk_q: int = 512, chunk_kv: int = 1024,
+                  use_flash: bool = False) -> jax.Array:
+    """Dispatch: small sequences take the one-shot einsum path."""
+    S = q.shape[1]
+    if (use_flash and causal and not window and kv_valid_len is None
+            and q.shape[1] == k.shape[1] and S % 256 == 0
+            and q.shape[-1] in (64, 128)):
+        from repro.kernels.flash_attn.ops import flash_attention_bshd
+        return constrain_divisible(
+            flash_attention_bshd(q, k, v, causal=True),
+            "batch", "seq_attn", "heads", None)
+    if (q.shape[1] <= chunk_threshold and k.shape[1] <= chunk_threshold
+            and kv_valid_len is None):
+        return full_attention(q, k, v, causal=causal, window=window)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_valid_len=kv_valid_len,
+                             chunk_q=chunk_q, chunk_kv=chunk_kv)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hkv, dh)
+    v: jax.Array
+    length: jax.Array     # int32 — number of positions ever appended
+
+
+def kv_cache_init(batch: int, s_max: int, n_kv: int, dh: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    # length is per-sequence (B,) so continuous batching can hold slots at
+    # different positions; lockstep decode just advances all of them.
+    return KVCache(
+        k=jnp.zeros((batch, s_max, n_kv, dh), dtype),
+        v=jnp.zeros((batch, s_max, n_kv, dh), dtype),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def kv_cache_append(cache: KVCache, k_new: jax.Array,
+                    v_new: jax.Array, *, ring: bool = False) -> KVCache:
+    """Append S_new positions.  ``ring=True`` wraps (local-window caches).
+
+    The single-token (decode) case is written as an explicit iota==pos
+    select instead of dynamic-update-slice: on a 'kv_seq'-sharded cache,
+    GSPMD lowers a dynamic DUS to a full-shard f32 update buffer; the
+    select stays in cache dtype and fuses to one masked copy.
+    """
+    s_max = cache.k.shape[1]
+    start = jnp.mod(cache.length, s_max) if ring else cache.length  # (B,)
+    if k_new.shape[1] == 1:
+        sel = (jnp.arange(s_max, dtype=jnp.int32)[None, :, None, None]
+               == start[:, None, None, None])
+        k = jnp.where(sel, k_new.astype(cache.k.dtype), cache.k)
+        v = jnp.where(sel, v_new.astype(cache.v.dtype), cache.v)
+    else:
+        # multi-token appends start from a uniform position (prefill)
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, start[0], 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, start[0], 0, 0))
+    return KVCache(k, v, cache.length + k_new.shape[1])
+
+
+def decode_attention(q: jax.Array, cache: KVCache, *, window: int = 0,
+                     chunk_kv: int = 2048) -> jax.Array:
+    """One-token decode: q (B, 1, H, dh) against the cache.
+
+    Written as a *single* grouped-einsum pass (no KV-chunk scan) on
+    purpose: the cache's seq dim is sharded over 'model' when the KV heads
+    don't divide it (logical axis 'kv_seq'), and GSPMD turns the softmax
+    max/sum and the PV contraction into tiny (B, H)-sized collectives —
+    a scan would dynamic-slice the sharded seq dim and force all-gathers
+    of the whole cache.  GQA is contracted group-wise so the KV tensors
+    are never materialized at full head count.
+    """
+    del chunk_kv
+    B, _, H, dh = q.shape
+    s_max = cache.k.shape[1]
+    Hkv = cache.k.shape[2]
+    G = H // Hkv
+    qg = (q * dh ** -0.5).reshape(B, Hkv, G, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, cache.k,
+                   preferred_element_type=jnp.float32)     # (B,Hkv,G,S)
+    kpos = jnp.arange(s_max)
+    length = cache.length
+    if length.ndim == 0:
+        length = jnp.broadcast_to(length, (B,))
+    if window and s_max <= window:
+        # ring cache: every live slot is in-window
+        mask = kpos[None, :] < jnp.minimum(length, s_max)[:, None]
+    else:
+        qpos = length - 1
+        mask = kpos[None, :] < length[:, None]
+        if window:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", (p / jnp.maximum(l, 1e-30)
+                                         ).astype(cache.v.dtype), cache.v)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)

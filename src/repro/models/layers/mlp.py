@@ -1,0 +1,27 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, w_down)
+    return constrain(out, "batch", "seq", "embed")
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in: jax.Array,
+             w_out: jax.Array, b_out: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", h, w_out) + b_out
+    return constrain(out, "batch", "seq", "embed")

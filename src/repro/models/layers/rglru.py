@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+a_t = exp(−c · softplus(Λ) · r_t),  r_t / i_t = σ(block-diag gates(x_t))
+
+Train/prefill uses ``jax.lax.associative_scan`` (log-depth) over the linear
+recurrence; decode carries (h, conv window) with O(1) state — which is why
+recurrentgemma runs the 500k-token long-context cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+
+_C = 8.0
+_N_BLOCKS = 16  # block-diagonal gate heads (RecurrentGemma uses blocked gates)
+
+
+def _blocked_gate(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (..., R) → σ(blockdiag(w)·x + b);  w: (nb, R/nb, R/nb)."""
+    nb, bw, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bw))
+    out = jnp.einsum("...ni,nij->...nj", xs, w)
+    return jax.nn.sigmoid(out.reshape(x.shape) + b)
+
+
+def _rglru_coeffs(p, xb: jax.Array):
+    xf = xb.astype(jnp.float32)
+    r = _blocked_gate(xf, p["w_a"].astype(jnp.float32),
+                      p["b_a"].astype(jnp.float32))
+    i = _blocked_gate(xf, p["w_x"].astype(jnp.float32),
+                      p["b_x"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    return a, gated
+
+
+def rglru_scan(p, xb: jax.Array) -> jax.Array:
+    """Full-sequence RG-LRU.  xb: (B, S, R) (post-conv branch input)."""
+    a, gated = _rglru_coeffs(p, xb)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(xb.dtype)
+
+
+class RGLRUCache(NamedTuple):
+    h: jax.Array        # (B, R) recurrent state, f32
+    conv: jax.Array     # (B, K-1, R) conv window
+
+
+def rglru_decode_step(p, xb: jax.Array,
+                      h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """xb: (B, 1, R); h: (B, R) → (y (B,1,R), h_new)."""
+    a, gated = _rglru_coeffs(p, xb[:, 0])
+    h_new = a * h + gated
+    return h_new.astype(xb.dtype)[:, None], h_new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv (no activation — Griffin applies none here)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    return (sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+            + b).astype(x.dtype)
+
+
+def recurrent_block(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    """Griffin recurrent block: two branches, gated merge.  x: (B,S,D)."""
+    y1 = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_branch1"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    x2 = jnp.einsum("bsd,dr->bsr", x, p["w_branch2"])
+    x2 = causal_conv1d(x2, p["conv_w"], p["conv_b"])
+    x2 = constrain(x2, "batch", "seq", "lru")
+    h = rglru_scan(p, x2)
+    out = jnp.einsum("bsr,rd->bsd", y1 * h, p["w_out"])
+    return constrain(out, "batch", "seq", "embed")
+
+
+def recurrent_block_decode(cfg: ModelConfig, p, x: jax.Array,
+                           cache: RGLRUCache) -> Tuple[jax.Array, RGLRUCache]:
+    y1 = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_branch1"])
+                     .astype(jnp.float32)).astype(x.dtype)
+    x2 = jnp.einsum("bsd,dr->bsr", x, p["w_branch2"])
+    K = p["conv_w"].shape[0]
+    window = jnp.concatenate([cache.conv, x2.astype(cache.conv.dtype)],
+                             axis=1)
+    x2c = (sum(window[:, i, :] * p["conv_w"][i] for i in range(K))
+           + p["conv_b"]).astype(x.dtype)[:, None]
+    h_out, h_new = rglru_decode_step(p, x2c, cache.h)
+    out = jnp.einsum("bsr,rd->bsd", y1 * h_out, p["w_out"])
+    return out, RGLRUCache(h=h_new, conv=window[:, 1:])

@@ -1,0 +1,238 @@
+"""Mamba2 — SSD (state-space duality) block, chunked parallel form for
+train/prefill and O(1)-state recurrent form for decode (arXiv:2405.21060).
+
+Chunked SSD (paper §6): the sequence is split into chunks of length L; the
+intra-chunk part is a small quadratic attention-like matmul with a decay
+mask, inter-chunk states are carried by a scan over chunk summaries — total
+work O(S·L·(N+P)) per head, sub-quadratic in S, TPU-friendly (all matmuls).
+
+Tensor-parallel layout (Megatron-style, see DESIGN.md §5): the fused
+``in_proj`` is split into per-role matrices so every d_inner-major tensor
+shards over the 'model' axis with *head-aligned* boundaries:
+
+    wz, wx : (D, d_inner)   — column-parallel ('inner' → model)
+    wbc    : (D, 2·G·N)     — replicated (B/C are shared across heads)
+    wdt    : (D, H)         — 'heads' → model (aligned with 'inner' shards
+                              because d_inner = H·P with H outermost)
+    out_proj: (d_inner, D)  — row-parallel; the contraction over the
+                              sharded d_inner produces the block's single
+                              all-reduce (same collective as a TP MLP).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, Bc, Cc, dt, A, D_skip, chunk: int):
+    """SSD over full sequences.
+
+    xh: (B,S,H,P); Bc/Cc: (B,S,G,N) (G broadcast over heads); dt: (B,S,H)
+    post-softplus; A: (H,) negative.  Returns (B,S,H,P) and final state
+    (B,H,N,P).
+    """
+    Bsz, S, H, P = xh.shape
+    G = Bc.shape[2]
+    N = Bc.shape[3]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = xh.shape[1] // L
+    xh = xh.reshape(Bsz, nc, L, H, P)
+    Bc = Bc.reshape(Bsz, nc, L, G, N)
+    Cc = Cc.reshape(Bsz, nc, L, G, N)
+    dt = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (B,nc,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dt * A[None, None, None, :]                    # (B,nc,L,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    total = cum[:, :, -1:, :]                           # (B,nc,1,H)
+
+    dx = xh * dt[..., None].astype(xh.dtype)            # dt·x
+
+    # intra-chunk: M[t,s] = C_t·B_s · exp(cum_t − cum_s) · 1[s ≤ t]
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh,
+                        preferred_element_type=jnp.float32)
+    decay = jnp.exp(cum[:, :, :, None, :].transpose(0, 1, 4, 2, 3)
+                    - cum[:, :, None, :, :].transpose(0, 1, 4, 3, 2)
+                    )                                   # (B,nc,H,L,L) t,s
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    M = jnp.where(causal[None, None, None], scores * decay, 0.0)
+    y_intra = jnp.einsum("bchls,bcshp->bclhp", M.astype(xh.dtype), dx,
+                         preferred_element_type=jnp.float32)
+
+    # chunk summary states: S_c = Σ_s exp(total − cum_s) · B_s ⊗ dx_s
+    w_end = jnp.exp(total - cum)                        # (B,nc,L,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp", Bh, w_end.astype(xh.dtype),
+                        dx, preferred_element_type=jnp.float32)
+
+    # inter-chunk scan: H_c = H_{c-1}·exp(total_c) + S_c
+    tot = jnp.exp(total[:, :, 0, :])                    # (B,nc,H)
+
+    def chunk_step(h, inp):
+        t, s = inp                                      # (B,H), (B,H,N,P)
+        h_out = h                                       # state BEFORE chunk
+        h = h * t[..., None, None] + s
+        return h, h_out
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(tot, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,N,P)
+
+    w_start = jnp.exp(cum)                              # decay since chunk start
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp", Ch,
+                         w_start.astype(xh.dtype),
+                         h_prevs.astype(xh.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).astype(xh.dtype)
+    y = y + xh * D_skip[None, None, None, :, None].astype(xh.dtype)
+    y = y.reshape(Bsz, nc * L, H, P)[:, : S]
+    return y, h_final
+
+
+class SSMCache(NamedTuple):
+    conv_x: jax.Array   # (B, K-1, d_inner) rolling conv inputs ('inner' shard)
+    conv_bc: jax.Array  # (B, K-1, 2·G·N) rolling conv inputs (replicated)
+    state: jax.Array    # (B, H, N, P) ssm state ('heads' shard)
+
+
+def _project(cfg: ModelConfig, p, x: jax.Array):
+    """All input projections + causal convs.  x: (B, S, D).
+
+    Returns (z, xs, bc, dt, conv_x_in, conv_bc_in) with xs/bc already
+    conv'd; conv_*_in are the *pre-conv* inputs (cache tails)."""
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    bc = jnp.einsum("bsd,de->bse", x, p["wbc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    z = constrain(z, "batch", "seq", "inner")
+    xs = constrain(xs, "batch", "seq", "inner")
+    dt = constrain(dt, "batch", "seq", "heads")
+    conv_x_in, conv_bc_in = xs, bc
+    xs = _causal_conv(xs, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    return z, xs, bc, dt, conv_x_in, conv_bc_in
+
+
+def mamba_block(cfg: ModelConfig, p, x: jax.Array, *,
+                return_cache: bool = False
+                ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """Full-sequence Mamba2 mixer.  x: (B, S, D) → ((B, S, D), cache?)."""
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    gn = ssm.n_groups * ssm.d_state
+    H = di // ssm.headdim
+    Bsz, S = x.shape[0], x.shape[1]
+    P, N = ssm.headdim, ssm.d_state
+
+    z, xs, bc, dt, conv_x_in, conv_bc_in = _project(cfg, p, x)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    xh = constrain(xs.reshape(Bsz, S, H, P), "batch", "seq", "heads", None)
+    Bg = Bc.reshape(Bsz, S, ssm.n_groups, N)
+    Cg = Cc.reshape(Bsz, S, ssm.n_groups, N)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+    y, h_final = ssd_chunked(xh, Bg, Cg, dtp, A, p["D_skip"], ssm.chunk)
+    y = y.reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    from repro.models.layers.common import rms_norm
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    out = constrain(out, "batch", "seq", "embed")
+    if not return_cache:
+        return out, None
+    K = ssm.d_conv
+    cache = SSMCache(
+        conv_x=conv_x_in[:, S - (K - 1):, :].astype(jnp.dtype(cfg.act_dtype)),
+        conv_bc=conv_bc_in[:, S - (K - 1):, :].astype(
+            jnp.dtype(cfg.act_dtype)),
+        state=h_final)
+    return out, cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int,
+                     dtype=jnp.bfloat16) -> SSMCache:
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    gn = ssm.n_groups * ssm.d_state
+    H = di // ssm.headdim
+    return SSMCache(
+        conv_x=jnp.zeros((batch, ssm.d_conv - 1, di), dtype),
+        conv_bc=jnp.zeros((batch, ssm.d_conv - 1, 2 * gn), dtype),
+        state=jnp.zeros((batch, H, ssm.d_state, ssm.headdim), jnp.float32))
+
+
+def mamba_decode_step(cfg: ModelConfig, p, x: jax.Array,
+                      cache: SSMCache) -> Tuple[jax.Array, SSMCache]:
+    """One-token recurrent step.  x: (B, 1, D)."""
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    gn = ssm.n_groups * ssm.d_state
+    H = di // ssm.headdim
+    Bsz = x.shape[0]
+    P, N = ssm.headdim, ssm.d_state
+    K = ssm.d_conv
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    bc = jnp.einsum("bsd,de->bse", x, p["wbc"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    win_x = jnp.concatenate([cache.conv_x,
+                             xs.astype(cache.conv_x.dtype)], axis=1)
+    win_bc = jnp.concatenate([cache.conv_bc,
+                              bc.astype(cache.conv_bc.dtype)], axis=1)
+
+    def _conv_tap(win, w, b):
+        out = sum(win[:, i, :] * w[i] for i in range(K)) + b
+        return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype)
+
+    xs1 = _conv_tap(win_x, p["conv_x_w"], p["conv_x_b"])       # (B, di)
+    bc1 = _conv_tap(win_bc, p["conv_bc_w"], p["conv_bc_b"])    # (B, 2gn)
+    Bc, Cc = bc1[:, :gn], bc1[:, gn:]
+    xh = xs1.reshape(Bsz, H, P)
+    rep = H // ssm.n_groups
+    Bh = jnp.repeat(Bc.reshape(Bsz, ssm.n_groups, N), rep, axis=1)
+    Ch = jnp.repeat(Cc.reshape(Bsz, ssm.n_groups, N), rep, axis=1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    decay = jnp.exp(dtp * A[None, :])                    # (B,H)
+    upd = jnp.einsum("bhn,bhp,bh->bhnp", Bh.astype(jnp.float32),
+                     xh.astype(jnp.float32), dtp)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), state)
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    from repro.models.layers.common import rms_norm
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = SSMCache(conv_x=win_x[:, 1:], conv_bc=win_bc[:, 1:],
+                         state=state)
+    return out, new_cache

@@ -1,0 +1,131 @@
+"""Mamba2-2.7b: attention-free SSD stack (arXiv:2405.21060).
+
+64 layers of (RMSNorm → Mamba2 mixer → residual); O(1) recurrent state in
+decode, so this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers.common import rms_norm, embed, logits
+from repro.models.layers.ssm import (mamba_block, mamba_decode_step,
+                                     mamba_cache_init, SSMCache)
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    gn = ssm.n_groups * ssm.d_state
+    H = di // ssm.headdim
+    proj_out = 2 * di + 2 * gn + H
+    conv_ch = di + 2 * gn
+    return di, gn, H, proj_out, conv_ch
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    """Megatron-style TP layout: the fused in_proj is split per role so
+    every d_inner-major tensor shards head-aligned over 'model' (see
+    layers/ssm.py module docstring)."""
+    L, D, V = cfg.n_layers, cfg.d_model, cfg.vocab
+    di, gn, H, proj_out, conv_ch = _dims(cfg)
+    K = cfg.ssm.d_conv
+    layers = {
+        "norm": ParamDef((L, D), (None, "embed"), "zeros"),
+        "wz": ParamDef((L, D, di), (None, "embed", "inner")),
+        "wx": ParamDef((L, D, di), (None, "embed", "inner")),
+        "wbc": ParamDef((L, D, 2 * gn), (None, "embed", None)),
+        "wdt": ParamDef((L, D, H), (None, "embed", "heads")),
+        "conv_x_w": ParamDef((L, K, di), (None, "conv", "inner"), scale=0.2),
+        "conv_x_b": ParamDef((L, di), (None, "inner"), "zeros"),
+        "conv_bc_w": ParamDef((L, K, 2 * gn), (None, "conv", None),
+                              scale=0.2),
+        "conv_bc_b": ParamDef((L, 2 * gn), (None, None), "zeros"),
+        "A_log": ParamDef((L, H), (None, "heads"), "zeros"),
+        "dt_bias": ParamDef((L, H), (None, "heads"), "zeros"),
+        "D_skip": ParamDef((L, H), (None, "heads"), "ones"),
+        "norm_gate": ParamDef((L, di), (None, "inner"), "zeros"),
+        "out_proj": ParamDef((L, di, D), (None, "inner", "embed")),
+    }
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.01),
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "layers": layers,
+    }
+
+
+def sharding_dims(cfg: ModelConfig) -> Dict[str, int]:
+    di, gn, H, proj_out, conv_ch = _dims(cfg)
+    # 'inner' = d_inner (head-aligned with 'heads': di = H·P, H outermost)
+    return {"heads": H, "inner": di, "vocab": cfg.vocab, "ff": 0, "kv": 0,
+            "embed": cfg.d_model}
+
+
+def _layer_params(lp):
+    keys = ("wz", "wx", "wbc", "wdt", "conv_x_w", "conv_x_b", "conv_bc_w",
+            "conv_bc_b", "A_log", "dt_bias", "D_skip", "out_proj")
+    p = {k: lp[k] for k in keys}
+    p["norm"] = lp["norm_gate"]
+    return p
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    x = embed(tokens, params["embed"]).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, _ = mamba_block(cfg, _layer_params(lp), h)
+        return x + out, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits(x, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> SSMCache:
+    one = mamba_cache_init(cfg, batch, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def forward_prefill(cfg: ModelConfig, params, batch):
+    """Prefill = full forward emitting final recurrent states per layer."""
+    tokens = batch["tokens"]
+    x = embed(tokens, params["embed"]).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, cache = mamba_block(cfg, _layer_params(lp), h,
+                                 return_cache=True)
+        return x + out, cache
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    return logits(x, params["embed"]), caches
+
+
+def forward_decode(cfg: ModelConfig, params, tokens, caches: SSMCache):
+    x = embed(tokens, params["embed"]).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, inp):
+        lp, cache = inp
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, cache = mamba_decode_step(cfg, _layer_params(lp), h, cache)
+        return x + out, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits(x, params["embed"]), caches

@@ -1,0 +1,68 @@
+"""Parameter definition machinery.
+
+Each model declares a nested dict of ``ParamDef`` (shape + logical axes +
+init law).  From one declaration we derive: abstract params (for the
+allocation-free dry-run), materialized params (smoke tests / examples), and
+the PartitionSpec tree (for pjit in_shardings).  Scanned layer stacks carry a
+leading 'layers' axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import to_pspec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis per dim
+    init: str = "normal"                 # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def param_pspecs(defs, rules=None):
+    return tree_map_defs(lambda d: to_pspec(d.axes, rules), defs)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    """Deterministic per-path initialization (cheap; smoke-scale only)."""
+    flat, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, max(len(flat), 1))
+    leaves = []
+    for k, d in zip(keys, flat):
+        if d.init == "zeros":
+            leaves.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            leaves.append(jnp.ones(d.shape, dtype))
+        else:
+            leaves.append(
+                (d.scale * jax.random.normal(k, d.shape)).astype(dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def count_params(defs) -> int:
+    flat, _ = jax.tree.flatten(defs, is_leaf=_is_def)
+    return int(sum(np.prod(d.shape) for d in flat))

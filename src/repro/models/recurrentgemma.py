@@ -1,0 +1,286 @@
+"""RecurrentGemma-9B: Griffin hybrid — repeating (rec, rec, local-attn)
+pattern (1 attention : 2 RG-LRU), GeGLU MLPs, MQA local attention with a
+2048 ring cache, O(1) recurrent state ⇒ runs the long_500k cell.
+
+38 layers = 12 scanned pattern groups of 3 + 2 explicit tail rec layers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers.common import rms_norm, apply_rope, embed, logits
+from repro.models.layers.attention import (attention_any, decode_attention,
+                                           KVCache, kv_cache_init,
+                                           kv_cache_append)
+from repro.models.layers.rglru import (recurrent_block,
+                                       recurrent_block_decode, RGLRUCache,
+                                       _N_BLOCKS)
+from repro.parallel.sharding import constrain
+
+N_GROUPS = 12      # scanned (rec, rec, attn) groups
+N_TAIL = 2         # trailing rec layers (38 = 12·3 + 2)
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def _rec_defs(L, D, R, K):
+    bw = R // _N_BLOCKS
+    return {
+        "norm": ParamDef((L, D), (None, "embed"), "zeros"),
+        "w_branch1": ParamDef((L, D, R), (None, "embed", "lru")),
+        "w_branch2": ParamDef((L, D, R), (None, "embed", "lru")),
+        "conv_w": ParamDef((L, K, R), (None, "conv", "lru"), scale=0.2),
+        "conv_b": ParamDef((L, R), (None, "lru"), "zeros"),
+        "w_a": ParamDef((L, _N_BLOCKS, bw, bw), (None, None, None, None)),
+        "b_a": ParamDef((L, R), (None, "lru"), "zeros"),
+        "w_x": ParamDef((L, _N_BLOCKS, bw, bw), (None, None, None, None)),
+        "b_x": ParamDef((L, R), (None, "lru"), "zeros"),
+        "lam": ParamDef((L, R), (None, "lru"), "ones"),
+        "w_out": ParamDef((L, R, D), (None, "lru", "embed")),
+    }
+
+
+def _mlp_defs(L, D, F):
+    return {
+        "norm": ParamDef((L, D), (None, "embed"), "zeros"),
+        "wg": ParamDef((L, D, F), (None, "embed", "ff")),
+        "wu": ParamDef((L, D, F), (None, "embed", "ff")),
+        "wd": ParamDef((L, F, D), (None, "ff", "embed")),
+    }
+
+
+def _attn_defs(L, D, H, KV, dh):
+    return {
+        "norm": ParamDef((L, D), (None, "embed"), "zeros"),
+        "wq": ParamDef((L, D, H * dh), (None, "embed", "heads")),
+        "wk": ParamDef((L, D, KV * dh), (None, "embed", "kv")),
+        "wv": ParamDef((L, D, KV * dh), (None, "embed", "kv")),
+        "wo": ParamDef((L, H * dh, D), (None, "heads", "embed")),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    R, K = _lru_width(cfg), cfg.rglru.conv_k
+    G = N_GROUPS
+    groups = {
+        "rec1": _rec_defs(G, D, R, K), "mlp1": _mlp_defs(G, D, F),
+        "rec2": _rec_defs(G, D, R, K), "mlp2": _mlp_defs(G, D, F),
+        "attn": _attn_defs(G, D, H, KV, dh), "mlp3": _mlp_defs(G, D, F),
+    }
+    tail = {
+        "rec": _rec_defs(N_TAIL, D, R, K), "mlp": _mlp_defs(N_TAIL, D, F),
+    }
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.01),
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "groups": groups,
+        "tail": tail,
+    }
+
+
+def sharding_dims(cfg: ModelConfig) -> Dict[str, int]:
+    return {"heads": cfg.n_heads, "kv": cfg.n_kv, "ff": cfg.d_ff,
+            "vocab": cfg.vocab, "lru": _lru_width(cfg),
+            "embed": cfg.d_model}
+
+
+def _gelu_mlp(cfg, lp, x):
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    g = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h, lp["wg"])
+                    .astype(jnp.float32)).astype(x.dtype)
+    u = jnp.einsum("bsd,df->bsf", h, lp["wu"])
+    hh = constrain(g * u, "batch", "seq", "ff")
+    return x + constrain(jnp.einsum("bsf,fd->bsd", hh, lp["wd"]),
+                         "batch", "seq", "embed")
+
+
+def _rec_layer(cfg, lp, x):
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    return x + recurrent_block(cfg, lp, h)
+
+
+def _attn_layer(cfg, lp, x, positions):
+    B, S = x.shape[:2]
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+    h = rms_norm(x, lp["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(B, S, KV, dh)
+    v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(B, S, KV, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    a = attention_any(q, k, v, causal=True, window=cfg.rglru.local_window,
+                      chunk_threshold=cfg.attn_full_threshold,
+                      chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+    a = jnp.einsum("bse,ed->bsd", a.reshape(B, S, H * dh), lp["wo"])
+    return x + constrain(a, "batch", "seq", "embed"), (k, v)
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    D = cfg.d_model
+    x = (embed(tokens, params["embed"]) * jnp.sqrt(jnp.float32(D)).astype(
+        jnp.dtype(cfg.act_dtype))).astype(jnp.dtype(cfg.act_dtype))
+
+    def group(x, gp):
+        x = _rec_layer(cfg, gp["rec1"], x)
+        x = _gelu_mlp(cfg, gp["mlp1"], x)
+        x = _rec_layer(cfg, gp["rec2"], x)
+        x = _gelu_mlp(cfg, gp["mlp2"], x)
+        x, _ = _attn_layer(cfg, gp["attn"], x, positions)
+        x = _gelu_mlp(cfg, gp["mlp3"], x)
+        return x, None
+
+    if cfg.remat == "full":
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(group, x, params["groups"])
+    for i in range(N_TAIL):
+        tp = jax.tree.map(lambda a: a[i], params["tail"])
+        x = _rec_layer(cfg, tp["rec"], x)
+        x = _gelu_mlp(cfg, tp["mlp"], x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits(x, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+class RGCache(NamedTuple):
+    rec1: RGLRUCache       # stacked (G, ...)
+    rec2: RGLRUCache
+    attn: KVCache          # ring caches, window-sized
+    tail: RGLRUCache       # stacked (N_TAIL, ...)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> RGCache:
+    R, K = _lru_width(cfg), cfg.rglru.conv_k
+    W = min(cfg.rglru.local_window, s_max)
+
+    def rec(n):
+        return RGLRUCache(
+            h=jnp.zeros((n, batch, R), jnp.float32),
+            conv=jnp.zeros((n, batch, K - 1, R), dtype))
+
+    one_kv = kv_cache_init(batch, W, cfg.n_kv, cfg.dh, dtype)
+    return RGCache(
+        rec1=rec(N_GROUPS), rec2=rec(N_GROUPS),
+        attn=jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (N_GROUPS,) + a.shape), one_kv),
+        tail=rec(N_TAIL))
+
+
+def forward_prefill(cfg: ModelConfig, params, batch):
+    """Full forward emitting decode-ready caches (final LRU states, conv
+    windows, last-`window` KV)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    D = cfg.d_model
+    W = min(cfg.rglru.local_window, S)
+    K = cfg.rglru.conv_k
+    dt = jnp.dtype(cfg.act_dtype)
+    x = (embed(tokens, params["embed"])
+         * jnp.sqrt(jnp.float32(D)).astype(dt)).astype(dt)
+
+    def rec_with_cache(lp, x):
+        from repro.models.layers.rglru import (_rglru_coeffs, causal_conv1d,
+                                               rglru_scan)
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        y1 = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", h, lp["w_branch1"])
+                         .astype(jnp.float32)).astype(h.dtype)
+        x2 = jnp.einsum("bsd,dr->bsr", h, lp["w_branch2"])
+        x2c = causal_conv1d(x2, lp["conv_w"], lp["conv_b"])
+        hseq = rglru_scan(lp, x2c)
+        out = jnp.einsum("bsr,rd->bsd", y1 * hseq, lp["w_out"])
+        cache = RGLRUCache(h=hseq[:, -1].astype(jnp.float32),
+                           conv=x2[:, S - (K - 1):, :].astype(dt))
+        return x + out, cache
+
+    def group(x, gp):
+        x, c1 = rec_with_cache(gp["rec1"], x)
+        x = _gelu_mlp(cfg, gp["mlp1"], x)
+        x, c2 = rec_with_cache(gp["rec2"], x)
+        x = _gelu_mlp(cfg, gp["mlp2"], x)
+        x, (k, v) = _attn_layer(cfg, gp["attn"], x, positions)
+        kv = KVCache(k=k[:, S - W:].astype(dt), v=v[:, S - W:].astype(dt),
+                     length=jnp.full((x.shape[0],), S, jnp.int32))
+        x = _gelu_mlp(cfg, gp["mlp3"], x)
+        return x, (c1, c2, kv)
+
+    if cfg.remat == "full":
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (c1s, c2s, kvs) = jax.lax.scan(group, x, params["groups"])
+    tails = []
+    for i in range(N_TAIL):
+        tp = jax.tree.map(lambda a: a[i], params["tail"])
+        x, ct = rec_with_cache(tp["rec"], x)
+        x = _gelu_mlp(cfg, tp["mlp"], x)
+        tails.append(ct)
+    tail = jax.tree.map(lambda *a: jnp.stack(a), *tails)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    cache = RGCache(rec1=c1s, rec2=c2s, attn=kvs, tail=tail)
+    return logits(x, params["embed"]), cache
+
+
+def forward_decode(cfg: ModelConfig, params, tokens, caches: RGCache):
+    B = tokens.shape[0]
+    D = cfg.d_model
+    dt = jnp.dtype(cfg.act_dtype)
+    pos = jnp.broadcast_to(caches.attn.length[0][:1][:, None],
+                           (B, 1)).astype(jnp.int32)
+    x = (embed(tokens, params["embed"])
+         * jnp.sqrt(jnp.float32(D)).astype(dt)).astype(dt)
+
+    def rec_step(lp, x, cache):
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, cache = recurrent_block_decode(cfg, lp, h, cache)
+        return x + out, cache
+
+    def attn_step(lp, x, cache):
+        H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.dh
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,de->bse", h, lp["wq"]).reshape(B, 1, H, dh)
+        k = jnp.einsum("bsd,de->bse", h, lp["wk"]).reshape(B, 1, KV, dh)
+        v = jnp.einsum("bsd,de->bse", h, lp["wv"]).reshape(B, 1, KV, dh)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        cache = kv_cache_append(cache, k, v, ring=True)
+        a = decode_attention(q, cache, window=cfg.rglru.local_window,
+                             chunk_kv=cfg.attn_chunk_kv)
+        a = jnp.einsum("bse,ed->bsd", a.reshape(B, 1, H * dh), lp["wo"])
+        return x + a, cache
+
+    def group(x, inp):
+        gp, c1, c2, kv = inp
+        x, c1 = rec_step(gp["rec1"], x, c1)
+        x = _gelu_mlp(cfg, gp["mlp1"], x)
+        x, c2 = rec_step(gp["rec2"], x, c2)
+        x = _gelu_mlp(cfg, gp["mlp2"], x)
+        x, kv = attn_step(gp["attn"], x, kv)
+        x = _gelu_mlp(cfg, gp["mlp3"], x)
+        return x, (c1, c2, kv)
+
+    x, (c1s, c2s, kvs) = jax.lax.scan(
+        group, x, (params["groups"], caches.rec1, caches.rec2, caches.attn))
+    tails = []
+    for i in range(N_TAIL):
+        tp = jax.tree.map(lambda a: a[i], params["tail"])
+        tc = jax.tree.map(lambda a: a[i], caches.tail)
+        x, tc = rec_step(tp["rec"], x, tc)
+        x = _gelu_mlp(cfg, tp["mlp"], x)
+        tails.append(tc)
+    tail = jax.tree.map(lambda *a: jnp.stack(a), *tails)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return logits(x, params["embed"]), RGCache(rec1=c1s, rec2=c2s, attn=kvs,
+                                               tail=tail)

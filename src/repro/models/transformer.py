@@ -1,0 +1,244 @@
+"""Decoder-only transformer family: smollm-135m / qwen1.5-0.5b / minitron-4b
+/ llama3-8b (dense GQA), kimi-k2 / grok-1 (MoE), qwen2-vl-2b (M-RoPE VLM).
+
+Pre-norm RMSNorm blocks, RoPE (or M-RoPE), SwiGLU or expert-parallel MoE,
+scan-over-layers with configurable remat, KV-cache prefill/decode paths.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers.common import (rms_norm, apply_rope, apply_mrope,
+                                        embed, logits)
+from repro.models.layers.attention import (attention_any, decode_attention,
+                                           KVCache, kv_cache_init,
+                                           kv_cache_append)
+from repro.models.layers.mlp import swiglu
+from repro.models.layers.moe import moe_block, virtual_expert_shapes
+from repro.parallel.sharding import (constrain, constrain_divisible,
+                                      current_mesh)
+
+
+def _msize() -> int:
+    mesh = current_mesh()
+    return mesh.shape["model"] if (mesh and "model" in mesh.shape) else 1
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    L, D, dh = cfg.n_layers, cfg.d_model, cfg.dh
+    H, KV, F, V = cfg.n_heads, cfg.n_kv, cfg.d_ff, cfg.vocab
+    layers: Dict = {
+        "attn_norm": ParamDef((L, D), (None, "embed"), "zeros"),
+        "wq": ParamDef((L, D, H * dh), (None, "embed", "heads")),
+        "wk": ParamDef((L, D, KV * dh), (None, "embed", "kv")),
+        "wv": ParamDef((L, D, KV * dh), (None, "embed", "kv")),
+        "wo": ParamDef((L, H * dh, D), (None, "heads", "embed")),
+        "mlp_norm": ParamDef((L, D), (None, "embed"), "zeros"),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = ParamDef((L, H * dh), (None, "heads"), "zeros")
+        layers["bk"] = ParamDef((L, KV * dh), (None, "kv"), "zeros")
+        layers["bv"] = ParamDef((L, KV * dh), (None, "kv"), "zeros")
+    if cfg.moe:
+        E = cfg.moe.n_experts
+        E_v, Fv = virtual_expert_shapes(cfg.moe, D, _msize())
+        layers["wr"] = ParamDef((L, D, E), (None, "embed", None))
+        layers["wg"] = ParamDef((L, E_v, D, Fv),
+                                (None, "experts", "embed", "expert_ff"))
+        layers["wu"] = ParamDef((L, E_v, D, Fv),
+                                (None, "experts", "embed", "expert_ff"))
+        layers["wd"] = ParamDef((L, E_v, Fv, D),
+                                (None, "experts", "expert_ff", "embed"))
+    else:
+        layers["wg"] = ParamDef((L, D, F), (None, "embed", "ff"))
+        layers["wu"] = ParamDef((L, D, F), (None, "embed", "ff"))
+        layers["wd"] = ParamDef((L, F, D), (None, "ff", "embed"))
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.01),
+        "final_norm": ParamDef((D,), ("embed",), "zeros"),
+        "layers": layers,
+    }
+    if not cfg.tied_embeddings:
+        defs["lm_head"] = ParamDef((V, D), ("vocab", "embed"), scale=0.01)
+    return defs
+
+
+def sharding_dims(cfg: ModelConfig) -> Dict[str, int]:
+    """Logical dim sizes consulted by make_rules (divisibility)."""
+    dims = {"heads": cfg.n_heads, "kv": cfg.n_kv, "ff": cfg.d_ff,
+            "vocab": cfg.vocab, "embed": cfg.d_model}
+    if cfg.moe:
+        E_v, Fv = virtual_expert_shapes(cfg.moe, cfg.d_model, _msize())
+        dims["experts"] = E_v
+        dims["expert_ff"] = 0           # stays unsharded (EP already on model)
+        dims["ff"] = 0
+    return dims
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if cfg.mrope_sections is not None:
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _qkv(cfg: ModelConfig, lp, h, positions):
+    B, S, D = h.shape
+    dh = cfg.dh
+    q = jnp.einsum("bsd,de->bse", h, lp["wq"])
+    k = jnp.einsum("bsd,de->bse", h, lp["wk"])
+    v = jnp.einsum("bsd,de->bse", h, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv, dh)
+    v = v.reshape(B, S, cfg.n_kv, dh)
+    # 'seq_attn' is live only when heads cannot shard over 'model' —
+    # sequence-parallel attention instead of replicated head compute.
+    q = constrain_divisible(q, "batch", "seq_attn", "heads", None)
+    k = constrain_divisible(k, "batch", "seq_attn", "kv", None)
+    if cfg.rope_theta:
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+    return q, k, v
+
+
+def _mlp(cfg: ModelConfig, lp, h):
+    if cfg.moe:
+        return moe_block(h, lp["wr"], lp["wg"], lp["wu"], lp["wd"],
+                         moe=cfg.moe)
+    return swiglu(h, lp["wg"], lp["wu"], lp["wd"]), jnp.zeros((), jnp.float32)
+
+
+def _layer_train(cfg: ModelConfig, x, lp, positions):
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    h = constrain_divisible(h, "batch", "seq_attn", "embed")
+    q, k, v = _qkv(cfg, lp, h, positions)
+    attn = attention_any(q, k, v, causal=True,
+                         chunk_threshold=cfg.attn_full_threshold,
+                         chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+                         use_flash=cfg.use_flash)
+    B, S = x.shape[:2]
+    attn = jnp.einsum("bse,ed->bsd",
+                      attn.reshape(B, S, cfg.n_heads * cfg.dh), lp["wo"])
+    x = x + constrain(attn, "batch", "seq", "embed")
+    h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    y, aux = _mlp(cfg, lp, h2)
+    return x + y, aux
+
+
+def _scan_layers(cfg: ModelConfig, x, layer_params, body):
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif cfg.remat == "minimal":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.lax.scan(body, x, layer_params)
+
+
+def forward_train(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, jax.Array]:
+    """tokens (B, S) → logits (B, S, V), aux losses."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(tokens, params["embed"]).astype(
+        jnp.dtype(cfg.act_dtype))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer_train(cfg, x, lp, positions)
+        return (x, aux + a), None
+
+    (x, aux), _ = _scan_layers(cfg, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"], body)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("lm_head", params["embed"])
+    return logits(x, table), aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16):
+    """Stacked per-layer KV caches (leading layer dim, scanned)."""
+    one = kv_cache_init(batch, s_max, cfg.n_kv, cfg.dh, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+
+
+def forward_prefill(cfg: ModelConfig, params, batch):
+    """Prefill: full-sequence forward that also materializes the KV caches.
+    Returns (last-position logits, stacked caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = embed(tokens, params["embed"]).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        h = constrain_divisible(h, "batch", "seq_attn", "embed")
+        q, k, v = _qkv(cfg, lp, h, positions)
+        attn = attention_any(q, k, v, causal=True,
+                             chunk_threshold=cfg.attn_full_threshold,
+                             chunk_q=cfg.attn_chunk_q,
+                             chunk_kv=cfg.attn_chunk_kv,
+                             use_flash=cfg.use_flash)
+        attn = jnp.einsum("bse,ed->bsd",
+                          attn.reshape(B, S, cfg.n_heads * cfg.dh), lp["wo"])
+        x = x + constrain(attn, "batch", "seq", "embed")
+        h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp(cfg, lp, h2)
+        return x + y, (k.astype(jnp.dtype(cfg.act_dtype)),
+                       v.astype(jnp.dtype(cfg.act_dtype)))
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    table = params.get("lm_head", params["embed"])
+    caches = KVCache(k=ks, v=vs,
+                     length=jnp.full((cfg.n_layers, B), S, jnp.int32))
+    return logits(x, table), caches
+
+
+def forward_decode(cfg: ModelConfig, params, tokens, caches):
+    """One-token decode.  tokens (B, 1); caches = stacked KVCache."""
+    B = tokens.shape[0]
+    pos = caches.length[0][:, None].astype(jnp.int32)        # (B, 1)
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+    x = embed(tokens, params["embed"]).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, inp):
+        lp, cache = inp
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, h, pos)
+        cache = kv_cache_append(cache, k, v)
+        attn = decode_attention(q, cache, chunk_kv=cfg.attn_chunk_kv)
+        attn = jnp.einsum("bse,ed->bsd",
+                          attn.reshape(B, 1, cfg.n_heads * cfg.dh), lp["wo"])
+        x = x + constrain(attn, "batch", "seq", "embed")
+        h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        y, _ = _mlp(cfg, lp, h2)
+        return x + y, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = params.get("lm_head", params["embed"])
+    return logits(x, table), caches

@@ -1,0 +1,237 @@
+"""Whisper-large-v3 backbone: 32-layer encoder + 32-layer decoder,
+LayerNorm/GELU/learned positions, cross-attention decode caches.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed (B, 1500, d) frame embeddings (post-conv), and the
+encoder consumes them directly.  The decoder is the LM for the shape cells.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.models.layers.common import layer_norm, embed, logits
+from repro.models.layers.attention import (attention_any, decode_attention,
+                                           KVCache, kv_cache_init,
+                                           kv_cache_append, full_attention)
+from repro.models.layers.mlp import gelu_mlp
+from repro.parallel.sharding import constrain
+
+MAX_DEC_POS = 32_768   # assignment shapes exceed whisper's 448; sized up
+
+
+def _attn_defs(L, D, H, dh, prefix=""):
+    return {
+        prefix + "wq": ParamDef((L, D, H * dh), (None, "embed", "heads")),
+        prefix + "bq": ParamDef((L, H * dh), (None, "heads"), "zeros"),
+        prefix + "wk": ParamDef((L, D, H * dh), (None, "embed", "heads")),
+        prefix + "wv": ParamDef((L, D, H * dh), (None, "embed", "heads")),
+        prefix + "bv": ParamDef((L, H * dh), (None, "heads"), "zeros"),
+        prefix + "wo": ParamDef((L, H * dh, D), (None, "heads", "embed")),
+        prefix + "bo": ParamDef((L, D), (None, "embed"), "zeros"),
+    }
+
+
+def _ln_defs(L, D, name):
+    return {name + "_s": ParamDef((L, D), (None, "embed"), "ones"),
+            name + "_b": ParamDef((L, D), (None, "embed"), "zeros")}
+
+
+def _mlp_defs(L, D, F):
+    return {
+        "w_in": ParamDef((L, D, F), (None, "embed", "ff")),
+        "b_in": ParamDef((L, F), (None, "ff"), "zeros"),
+        "w_out": ParamDef((L, F, D), (None, "ff", "embed")),
+        "b_out": ParamDef((L, D), (None, "embed"), "zeros"),
+    }
+
+
+def param_defs(cfg: ModelConfig) -> Dict:
+    D, dh, H, F, V = (cfg.d_model, cfg.dh, cfg.n_heads, cfg.d_ff, cfg.vocab)
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    enc = {**_ln_defs(Le, D, "ln1"), **_attn_defs(Le, D, H, dh),
+           **_ln_defs(Le, D, "ln2"), **_mlp_defs(Le, D, F)}
+    dec = {**_ln_defs(Ld, D, "ln1"), **_attn_defs(Ld, D, H, dh),
+           **_ln_defs(Ld, D, "ln2"), **_attn_defs(Ld, D, H, dh, "x_"),
+           **_ln_defs(Ld, D, "ln3"), **_mlp_defs(Ld, D, F)}
+    return {
+        "embed": ParamDef((V, D), ("vocab", "embed"), scale=0.01),
+        "enc_pos": ParamDef((cfg.enc_frames, D), ("frames", "embed"),
+                            scale=0.01),
+        "dec_pos": ParamDef((MAX_DEC_POS, D), ("pos", "embed"), scale=0.01),
+        "enc_final_s": ParamDef((D,), ("embed",), "ones"),
+        "enc_final_b": ParamDef((D,), ("embed",), "zeros"),
+        "dec_final_s": ParamDef((D,), ("embed",), "ones"),
+        "dec_final_b": ParamDef((D,), ("embed",), "zeros"),
+        "enc_layers": enc,
+        "dec_layers": dec,
+    }
+
+
+def sharding_dims(cfg: ModelConfig) -> Dict[str, int]:
+    return {"heads": cfg.n_heads, "kv": cfg.n_kv, "ff": cfg.d_ff,
+            "vocab": cfg.vocab, "embed": cfg.d_model}
+
+
+def _proj_qkv(cfg, lp, hq, hkv, prefix=""):
+    B, Sq = hq.shape[:2]
+    Skv = hkv.shape[1]
+    H, dh = cfg.n_heads, cfg.dh
+    q = (jnp.einsum("bsd,de->bse", hq, lp[prefix + "wq"]) + lp[prefix + "bq"])
+    k = jnp.einsum("bsd,de->bse", hkv, lp[prefix + "wk"])
+    v = (jnp.einsum("bsd,de->bse", hkv, lp[prefix + "wv"])
+         + lp[prefix + "bv"])
+    return (q.reshape(B, Sq, H, dh), k.reshape(B, Skv, H, dh),
+            v.reshape(B, Skv, H, dh))
+
+
+def _out(cfg, lp, attn, prefix=""):
+    B, S = attn.shape[:2]
+    return (jnp.einsum("bse,ed->bsd",
+                       attn.reshape(B, S, cfg.n_heads * cfg.dh),
+                       lp[prefix + "wo"]) + lp[prefix + "bo"])
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: (B, enc_frames, D) stub embeddings → encoder states."""
+    x = (frames + params["enc_pos"][None]).astype(jnp.dtype(cfg.act_dtype))
+    x = constrain(x, "batch", "seq", "embed")
+
+    def body(x, lp):
+        h = layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(cfg, lp, h, h)
+        a = full_attention(q, k, v, causal=False)
+        x = x + _out(cfg, lp, a)
+        h2 = layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        x = x + gelu_mlp(h2, lp["w_in"], lp["b_in"], lp["w_out"],
+                         lp["b_out"])
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return layer_norm(x, params["enc_final_s"], params["enc_final_b"],
+                      cfg.norm_eps)
+
+
+def _decoder_body(cfg, enc_out, positions, collect_cache: bool):
+    def body(x, lp):
+        B, S = x.shape[:2]
+        h = layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(cfg, lp, h, h)
+        a = attention_any(q, k, v, causal=True,
+                          chunk_threshold=cfg.attn_full_threshold,
+                          chunk_q=cfg.attn_chunk_q,
+                          chunk_kv=cfg.attn_chunk_kv)
+        x = x + _out(cfg, lp, a)
+        hx = layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        qx, kx, vx = _proj_qkv(cfg, lp, hx, enc_out, "x_")
+        ax = attention_any(qx, kx, vx, causal=False,
+                           chunk_threshold=cfg.attn_full_threshold)
+        x = x + _out(cfg, lp, ax, "x_")
+        h2 = layer_norm(x, lp["ln3_s"], lp["ln3_b"], cfg.norm_eps)
+        x = x + gelu_mlp(h2, lp["w_in"], lp["b_in"], lp["w_out"],
+                         lp["b_out"])
+        if collect_cache:
+            dt = jnp.dtype(cfg.act_dtype)
+            return x, (k.astype(dt), v.astype(dt), kx.astype(dt),
+                       vx.astype(dt))
+        return x, None
+    return body
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = (embed(tokens, params["embed"])
+         + params["dec_pos"][:S][None]).astype(jnp.dtype(cfg.act_dtype))
+    body = _decoder_body(cfg, enc_out, None, False)
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x, params["dec_final_s"], params["dec_final_b"],
+                   cfg.norm_eps)
+    return logits(x, params["embed"]), jnp.zeros((), jnp.float32)
+
+
+class WhisperCache(NamedTuple):
+    self_kv: KVCache       # stacked (Ld, ...)
+    cross_k: jax.Array     # (Ld, B, frames, H, dh)
+    cross_v: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int,
+               dtype=jnp.bfloat16) -> WhisperCache:
+    one = kv_cache_init(batch, s_max, cfg.n_heads, cfg.dh, dtype)
+    Ld = cfg.n_layers
+    return WhisperCache(
+        self_kv=jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (Ld,) + a.shape), one),
+        cross_k=jnp.zeros((Ld, batch, cfg.enc_frames, cfg.n_heads, cfg.dh),
+                          dtype),
+        cross_v=jnp.zeros((Ld, batch, cfg.enc_frames, cfg.n_heads, cfg.dh),
+                          dtype))
+
+
+def forward_prefill(cfg: ModelConfig, params, batch):
+    """Encode + run the decoder prompt, materializing self+cross caches."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = (embed(tokens, params["embed"])
+         + params["dec_pos"][:S][None]).astype(jnp.dtype(cfg.act_dtype))
+    body = _decoder_body(cfg, enc_out, None, True)
+    if cfg.remat == "full":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = layer_norm(x[:, -1:], params["dec_final_s"], params["dec_final_b"],
+                   cfg.norm_eps)
+    Ld = cfg.n_layers
+    cache = WhisperCache(
+        self_kv=KVCache(k=ks, v=vs,
+                        length=jnp.full((Ld, B), S, jnp.int32)),
+        cross_k=kxs, cross_v=vxs)
+    return logits(x, params["embed"]), cache
+
+
+def forward_decode(cfg: ModelConfig, params, tokens, caches: WhisperCache):
+    B = tokens.shape[0]
+    pos = caches.self_kv.length[0][0]  # uniform prompt positions
+    x = (embed(tokens, params["embed"])
+         + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1)[None]
+         ).astype(jnp.dtype(cfg.act_dtype))
+
+    def body(x, inp):
+        lp, cache, ck, cv = inp
+        h = layer_norm(x, lp["ln1_s"], lp["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(cfg, lp, h, h)
+        cache = kv_cache_append(cache, k, v)
+        a = decode_attention(q, cache, chunk_kv=cfg.attn_chunk_kv)
+        x = x + _out(cfg, lp, a)
+        hx = layer_norm(x, lp["ln2_s"], lp["ln2_b"], cfg.norm_eps)
+        qx = (jnp.einsum("bsd,de->bse", hx, lp["x_wq"]) + lp["x_bq"])
+        qx = qx.reshape(B, 1, cfg.n_heads, cfg.dh)
+        ax = full_attention(qx, ck, cv, causal=False)
+        x = x + _out(cfg, lp, ax, "x_")
+        h2 = layer_norm(x, lp["ln3_s"], lp["ln3_b"], cfg.norm_eps)
+        x = x + gelu_mlp(h2, lp["w_in"], lp["b_in"], lp["w_out"],
+                         lp["b_out"])
+        return x, cache
+
+    x, self_kv = jax.lax.scan(
+        body, x, (params["dec_layers"], caches.self_kv, caches.cross_k,
+                  caches.cross_v))
+    x = layer_norm(x, params["dec_final_s"], params["dec_final_b"],
+                   cfg.norm_eps)
+    new = WhisperCache(self_kv=self_kv, cross_k=caches.cross_k,
+                       cross_v=caches.cross_v)
+    return logits(x, params["embed"]), new

@@ -1,0 +1,32 @@
+"""Serving steps: prefill (prompt → caches + first logits) and decode
+(one token per call, greedy or sampled), cache buffers donated."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, caches = api.forward_prefill(cfg, params, batch)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, *, temperature: float = 0.0):
+    def decode_step(params, tokens, caches, rng: Optional[jax.Array] = None):
+        logits, caches = api.forward_decode(cfg, params, tokens, caches)
+        last = logits[:, -1].astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, last / temperature)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], caches
+    return decode_step

@@ -1,0 +1,14 @@
+"""DS-FD integrated into distributed training (DESIGN.md §2b):
+
+* ``monitor``  — SlidingGradSketch: windowed streaming PCA of gradients.
+* ``compress`` — FD low-rank gradient compression with error feedback for
+  the cross-pod all-reduce.
+* ``sketchy``  — sliding-window Sketchy optimizer (FD preconditioning with
+  curvature forgetting).
+"""
+
+from repro.sketch.monitor import SketchConfig, sketch_init, sketch_update, \
+    sketch_query, subspace_drift                                # noqa: F401
+from repro.sketch.compress import CompressConfig, compress_grads, \
+    compress_init, wire_bytes, compressed_psum                  # noqa: F401
+from repro.sketch.sketchy import SketchyConfig, sketchy_dsfd    # noqa: F401

@@ -1,0 +1,34 @@
+"""Shared helper: top-r eigenbasis of the windowed covariance represented
+by a stack of sketch rows (snapshots ∪ FD residual).
+
+``rows`` is the fixed-shape (k, d) stack returned by ``dsfd_query_rows``
+(zero rows for empty slots are harmless).  We eigendecompose the small
+k×k Gram matrix — O(k²d + k³) with k ≈ 2ℓ + cap ≪ d — and map left
+eigenvectors back to right singular directions of the row space.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topr_basis(rows: jax.Array, r: int) -> Tuple[jax.Array, jax.Array]:
+    """Top-r (eigenvalues, right-singular basis) of rowsᵀrows.
+
+    Returns (lam (r,), V (r, d)) with lam sorted descending; V rows are
+    orthonormal (up to fp) and zero where the spectrum is empty.
+    """
+    k, d = rows.shape
+    r = min(r, k)
+    K = (rows @ rows.T).astype(jnp.float32)              # (k, k) PSD
+    lam, U = jnp.linalg.eigh(K)                          # ascending
+    lam = lam[::-1][:r]
+    U = U[:, ::-1][:, :r]                                # (k, r)
+    safe = jnp.sqrt(jnp.maximum(lam, 1e-12))
+    V = (U.T @ rows.astype(jnp.float32)) / safe[:, None]  # (r, d)
+    # zero out directions with (numerically) no energy
+    live = (lam > 1e-10).astype(jnp.float32)
+    return lam * live, V * live[:, None]

@@ -1,0 +1,106 @@
+"""SlidingGradSketch — DS-FD over the stream of per-step gradient
+summaries: a *windowed* streaming PCA of optimization dynamics (the
+paper's motivating application class: sliding-window / real-time PCA,
+event & fault detection — here applied to training itself).
+
+Each train step the gradient pytree is reduced to one d-dimensional row by
+a deterministic count-sketch (pure arithmetic hash — no projection matrix
+to store, O(n) work, n = total params), L2-normalized (Problem 1.1's
+row-normalized model; the raw norm is tracked separately), and fed into a
+DS-FD sketch with window N steps.  Queries expose the top windowed
+directions — e.g. for drift detection ("the gradient subspace rotated"),
+loss-spike forensics, or LR tuning signals.  Everything is jittable and
+lives inside the train step; state is a pytree checkpointed with the run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsfd import (DSFDConfig, DSFDState, dsfd_init, dsfd_update,
+                             dsfd_query_rows, make_config)
+from repro.sketch.basis import topr_basis
+
+_P1 = jnp.uint32(2654435761)          # Knuth multiplicative hashes
+_P2 = jnp.uint32(40503)
+
+
+@dataclasses.dataclass(frozen=True)
+class SketchConfig:
+    d: int = 256                      # count-sketch width
+    eps: float = 0.125                # DS-FD 1/ℓ
+    window: int = 256                 # sliding window, in train steps
+    mode: str = "fast"
+
+    def dsfd(self) -> DSFDConfig:
+        return make_config(self.d, self.eps, self.window, mode=self.mode)
+
+
+class MonitorState(Tuple):
+    pass
+
+
+def _leaf_seed(path: str) -> int:
+    h = 2166136261
+    for ch in path:
+        h = ((h ^ ord(ch)) * 16777619) & 0xFFFFFFFF
+    return h
+
+
+def project_grads(cfg: SketchConfig, grads) -> jax.Array:
+    """Count-sketch the whole gradient pytree into one (d,) row."""
+    leaves = jax.tree_util.tree_leaves_with_path(grads)
+    vec = jnp.zeros((cfg.d,), jnp.float32)
+    for path, g in leaves:
+        seed = _leaf_seed(jax.tree_util.keystr(path))
+        gf = g.reshape(-1).astype(jnp.float32)
+        idx = jnp.arange(gf.size, dtype=jnp.uint32) + jnp.uint32(seed)
+        bucket = ((idx * _P1) >> 16).astype(jnp.int32) % cfg.d
+        sign = jnp.where((idx * _P2) & jnp.uint32(1 << 15), 1.0, -1.0)
+        vec = vec.at[bucket].add(gf * sign)
+    return vec
+
+
+def sketch_init(cfg: SketchConfig) -> Dict:
+    return {"dsfd": dsfd_init(cfg.dsfd()),
+            "norm_hist": jnp.zeros((cfg.window,), jnp.float32)}
+
+
+def sketch_update(cfg: SketchConfig, state: Optional[Dict], grads,
+                  step) -> Tuple[Dict, Dict]:
+    """Feed one step's gradients; returns (state, metrics)."""
+    if state is None:
+        state = sketch_init(cfg)
+    dcfg = cfg.dsfd()
+    row = project_grads(cfg, grads)
+    norm = jnp.linalg.norm(row)
+    unit = row / jnp.maximum(norm, 1e-30)
+    now = jnp.asarray(step, jnp.int32) + 1
+    dsfd = dsfd_update(dcfg, state["dsfd"], unit, now)
+    hist = state["norm_hist"].at[jnp.mod(now, cfg.window)].set(norm)
+    metrics = {
+        "sketch/grad_norm_proj": norm,
+        "sketch/top_energy": dsfd.main.sig1,
+        "sketch/window_norm2": jnp.sum(hist * hist),
+    }
+    return {"dsfd": dsfd, "norm_hist": hist}, metrics
+
+
+def sketch_query(cfg: SketchConfig, state: Dict, r: int = 8):
+    """Top-r windowed gradient directions + eigenvalues."""
+    rows = dsfd_query_rows(cfg.dsfd(), state["dsfd"])
+    return topr_basis(rows, r)
+
+
+def subspace_drift(cfg: SketchConfig, state_a: Dict, state_b: Dict,
+                   r: int = 8) -> jax.Array:
+    """1 − ‖V_a V_bᵀ‖_F²/r — 0 when the windowed top-r subspaces align,
+    → 1 when they rotate apart.  A cheap training-dynamics drift score."""
+    _, va = sketch_query(cfg, state_a, r)
+    _, vb = sketch_query(cfg, state_b, r)
+    m = va @ vb.T
+    return 1.0 - jnp.sum(m * m) / r

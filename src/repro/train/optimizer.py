@@ -1,0 +1,187 @@
+"""Optimizers as pure (init, update) pairs on param pytrees.
+
+* ``adamw`` — fp32 m/v (small & mid archs).
+* ``adafactor`` — factored fp32 second moments + bf16 momentum.  This is the
+  default for the ≥100B MoE archs: AdamW's fp32 m+v would need 16 GB/chip on
+  kimi-k2@512 (see DESIGN.md §5 memory budget); factored stats cut optimizer
+  state to ~1.05× params in bf16-equivalents.
+* ``sgdm`` — for toy tests.
+
+Each state leaf mirrors the param tree so param PartitionSpecs apply
+leaf-wise (optimizer state shards exactly like its parameter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+# -- AdamW -------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, wd: float = 0.01,
+          warmup: int = 100) -> Optimizer:
+    def init(params):
+        # two *independent* zero trees — sharing one tree makes m and v
+        # alias the same buffers, which breaks donation (donate-twice)
+        return AdamState(
+            m=_tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            v=_tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        sched = lr * jnp.minimum(1.0, stepf / warmup)
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state.m, grads)
+        v = _tmap(lambda v, g: b2 * v + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        mh = _tmap(lambda m: m / (1 - b1 ** stepf), m)
+        vh = _tmap(lambda v: v / (1 - b2 ** stepf), v)
+        new_params = _tmap(
+            lambda p, mh, vh: (p.astype(jnp.float32)
+                               - sched * (mh / (jnp.sqrt(vh) + eps)
+                                          + wd * p.astype(jnp.float32))
+                               ).astype(p.dtype),
+            params, mh, vh)
+        return new_params, AdamState(m=m, v=v)
+
+    return Optimizer("adamw", init, update)
+
+
+# -- Adafactor (factored second moments) --------------------------------------
+
+
+class FactoredState(NamedTuple):
+    vr: Any      # row stats (or full v for <2D leaves)
+    vc: Any      # col stats (or 0-d placeholder)
+    mom: Any     # bf16 momentum
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.99, eps: float = 1e-30,
+              momentum: float = 0.9, warmup: int = 100) -> Optimizer:
+    """``momentum=0`` drops the bf16 momentum tree entirely (the original
+    Adafactor design) — the memory mode the ≥300B configs need to fit a
+    16 GB/chip budget (see DESIGN.md §5)."""
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        vr = _tmap(lambda p: jnp.zeros(p.shape[:-1], jnp.float32)
+                   if _factored(p) else jnp.zeros(p.shape, jnp.float32),
+                   params)
+        vc = _tmap(lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)
+                   if _factored(p) else jnp.zeros((), jnp.float32), params)
+        mom = _tmap(lambda p: (jnp.zeros(p.shape, jnp.bfloat16) if momentum
+                               else jnp.zeros((), jnp.bfloat16)), params)
+        return FactoredState(vr=vr, vc=vc, mom=mom)
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        sched = lr * jnp.minimum(1.0, stepf / warmup)
+
+        def upd(p, g, vr, vc, mom):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+                vc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)
+                                  [..., None], eps))
+                u = g / jnp.maximum(denom, 1e-12)
+            else:
+                vr = decay * vr + (1 - decay) * g2
+                u = g / jnp.maximum(jnp.sqrt(vr), 1e-12)
+            # update clipping (Shazeer & Stern)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms)
+            if momentum:
+                u = momentum * mom.astype(jnp.float32) + u
+                mom = u.astype(jnp.bfloat16)
+            p_new = (p.astype(jnp.float32) - sched * u).astype(p.dtype)
+            return p_new, vr, vc, mom
+
+        out = _tmap(upd, params, grads, state.vr, state.vc, state.mom)
+        # out is a tree of 4-tuples; unzip
+        p_new = _tmap(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        vr = _tmap(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        vc = _tmap(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        mom = _tmap(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+        return p_new, FactoredState(vr=vr, vc=vc, mom=mom)
+
+    return Optimizer("adafactor", init, update)
+
+
+def sgdm(lr: float = 0.1, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        del step
+        mom = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                    state, grads)
+        new_params = _tmap(lambda p, m: (p.astype(jnp.float32)
+                                         - lr * m).astype(p.dtype),
+                           params, mom)
+        return new_params, mom
+
+    return Optimizer("sgdm", init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](**kw)
+
+
+def opt_state_pspecs(opt: Optimizer, param_specs, aparams, astate):
+    """Optimizer-state PartitionSpecs, derived by matching each state
+    leaf's shape against its parameter's shape (full / rows / cols /
+    scalar placeholder).  Works for every optimizer here, including the
+    momentum-free Adafactor whose mom leaves are scalars."""
+    from jax.sharding import PartitionSpec as P
+
+    def leaf(spec, p, s):
+        if not hasattr(s, "shape"):
+            # nested state object (e.g. a DS-FD sketch per leaf) — its
+            # members are small; replicate them
+            return jax.tree.map(lambda _: P(), s)
+        t = tuple(spec)
+        if s.shape == p.shape:
+            return spec
+        if s.shape == p.shape[:-1]:
+            return P(*t[:-1])
+        if len(p.shape) >= 2 and s.shape == p.shape[:-2] + p.shape[-1:]:
+            return P(*(t[:-2] + t[-1:]))
+        return P()
+
+    def field(ftree):
+        return jax.tree.map(leaf, param_specs, aparams, ftree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    if hasattr(astate, "_fields"):
+        return type(astate)(
+            *[field(getattr(astate, f)) for f in astate._fields])
+    return field(astate)

@@ -1,0 +1,190 @@
+"""Train step builder: microbatched gradient accumulation, cross-entropy
+loss (+ MoE aux), optimizer update, optional DS-FD gradient sketching and
+FD gradient compression (DESIGN.md §2b).
+
+Microbatching is how the big cells fit HBM: the per-layer scan checkpoints
+alone for kimi-k2 @ train_4k would need ~29 GB/device at full batch; the
+auto-chosen microbatch count caps checkpoint memory at ``ACT_BUDGET`` bytes
+(≈2 GB) per device and accumulates grads across a lax.scan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api
+from repro.models.params import count_params
+from repro.train.optimizer import Optimizer
+
+ACT_BUDGET = 2 * 1024**3          # per-device activation-checkpoint budget
+BIG_PARAMS = 50e9                 # > this → bf16 grad accumulation
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_micro: int = 1
+    accum_dtype: str = "float32"
+    aux_coeff: float = 0.01
+    grad_clip: float = 1.0
+    sketch: Optional[object] = None       # repro.sketch.monitor.SketchConfig
+    compress: Optional[object] = None     # repro.sketch.compress.CompressConfig
+
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeSpec,
+                      data_shards: int, *, fsdp: bool = False,
+                      nparams: float = 0.0) -> int:
+    """Choose n_micro so per-device layer-checkpoint bytes fit ACT_BUDGET.
+
+    Under FSDP every microbatch re-gathers the sharded weights, so the
+    collective term scales ~linearly with n_micro (measured on
+    kimi-k2@16×16: 345s → 188s → 109s for n_micro 16 → 8 → 4, §Perf
+    iteration 4).  For the ≥500B tier the gather term dominates every
+    other cost → cap at 8 and spend HBM on activations; below that tier
+    the activation/MoE-buffer growth outweighs it (grok-1 temp 22→128 GB
+    at n_micro 16→8 — hypothesis refuted for that cell, recorded in
+    EXPERIMENTS.md §Perf iteration 4)."""
+    per_layer = shape.seq_len * cfg.d_model * 2          # bf16 carry
+    n_layers = cfg.n_layers + cfg.enc_layers
+    local_batch = max(shape.global_batch // max(data_shards, 1), 1)
+    total = per_layer * n_layers * local_batch
+    n = 1
+    while total / n > ACT_BUDGET and n < local_batch:
+        n *= 2
+    # n_micro must divide the local batch so shards stay even
+    while local_batch % n and n < local_batch:
+        n *= 2
+    n = min(n, local_batch)
+    if fsdp and nparams > 500e9:
+        n = min(n, 8)
+    return n
+
+
+def loss_fn(cfg: ModelConfig, params, micro_batch,
+            aux_coeff: float = 0.01):
+    """Cross-entropy written to stay sharded over the vocab ('model') axis.
+
+    ``log_softmax`` + ``take_along_axis`` would force GSPMD to all-gather
+    the (B, S, V) logits (a ~6 GB/device temp at 50k vocab).  Instead:
+    ``nll = logsumexp(z) − Σ_v z·onehot`` — both reductions over the
+    sharded vocab dim lower to partial-reduce + tiny (B, S) all-reduce.
+    """
+    from repro.parallel.sharding import constrain
+    logits, aux = api.forward_train(cfg, params, micro_batch)
+    labels = micro_batch["labels"]
+    zf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(zf, axis=-1)                       # (B, S)
+    onehot = constrain(
+        jax.nn.one_hot(labels, zf.shape[-1], dtype=zf.dtype),
+        "batch", "seq", "vocab")
+    label_logit = jnp.sum(zf * onehot, axis=-1)               # (B, S)
+    loss = jnp.mean(lse - label_logit)
+    # z-loss keeps the softmax normalizer bounded (stability at scale)
+    zl = 1e-4 * jnp.mean(jnp.square(lse))
+    return loss + aux_coeff * aux + zl, (loss, aux)
+
+
+def build_train_step(cfg: ModelConfig, opt: Optimizer,
+                     tsc: TrainStepConfig = TrainStepConfig()):
+    """Returns train_step(params, opt_state, step, batch [, sketch_state])
+    → (params, opt_state, step+1, metrics [, sketch_state])."""
+    accum_dtype = jnp.dtype(tsc.accum_dtype)
+
+    def grads_of(params, batch):
+        n_micro = tsc.n_micro
+        if n_micro <= 1:
+            (tot, (loss, aux)), grads = jax.value_and_grad(
+                lambda p, b: loss_fn(cfg, p, b, tsc.aux_coeff),
+                has_aux=True)(params, batch)
+            return grads, loss, aux
+
+        def split(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        micros = {k: split(v) for k, v in batch.items()}
+
+        def micro_step(carry, micro):
+            gacc, lacc, aacc = carry
+            (_, (loss, aux)), g = jax.value_and_grad(
+                lambda p, b: loss_fn(cfg, p, b, tsc.aux_coeff),
+                has_aux=True)(params, micro)
+            # NOTE(§Perf iter 1): pinning this carry to the param
+            # shardings was hypothesized to cut the per-micro grad
+            # all-reduce; measurement refuted it (XLA already shards the
+            # carry) and under FSDP the forced reshard cost grok-1
+            # +103 GB/device temp — so no constraint here.
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(accum_dtype) / n_micro, gacc, g)
+            return (gacc, lacc + loss / n_micro, aacc + aux / n_micro), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        (grads, loss, aux), _ = jax.lax.scan(
+            micro_step,
+            (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            micros)
+        return grads, loss, aux
+
+    def train_step(params, opt_state, step, batch, sketch_state=None):
+        """sketch_state (optional): {"compress": ..., "monitor": ...} — the
+        DS-FD training-integration state (repro.sketch)."""
+        grads, loss, aux = grads_of(params, batch)
+        if sketch_state is not None:
+            sk = dict(sketch_state)
+        elif tsc.compress is not None or tsc.sketch is not None:
+            sk = {}
+        else:
+            sk = None
+
+        if tsc.compress is not None:
+            from repro.sketch.compress import compress_grads
+            grads, sk["compress"] = compress_grads(
+                tsc.compress, grads, sk.get("compress"))
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, tsc.grad_clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        metrics = {"loss": loss, "aux": aux, "grad_norm": gnorm}
+
+        if tsc.sketch is not None:
+            from repro.sketch.monitor import sketch_update
+            sk["monitor"], sk_metrics = sketch_update(
+                tsc.sketch, sk.get("monitor"), grads, step)
+            metrics.update(sk_metrics)
+
+        out = (new_params, new_opt, step + 1, metrics)
+        if sk is not None:
+            return out + (sk,)
+        return out
+
+    return train_step
+
+
+def init_sketch_state(tsc: TrainStepConfig, params, opt: Optimizer):
+    """Materialize the DS-FD integration state for this config (or None)."""
+    if tsc.sketch is None and tsc.compress is None:
+        return None
+    sk = {}
+    if tsc.compress is not None:
+        from repro.sketch.compress import compress_init
+        grads_like = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        sk["compress"] = compress_init(tsc.compress, grads_like)
+    if tsc.sketch is not None:
+        from repro.sketch.monitor import sketch_init
+        sk["monitor"] = sketch_init(tsc.sketch)
+    return sk
+
+
+def pick_optimizer_name(cfg: ModelConfig) -> str:
+    """AdamW for ≤50B params; factored Adafactor beyond (DESIGN.md §5)."""
+    return "adafactor" if count_params(api.param_defs(cfg)) > BIG_PARAMS \
+        else "adamw"

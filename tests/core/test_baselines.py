@@ -1,0 +1,75 @@
+"""Baseline comparators (LM-FD / DI-FD / SWR / SWOR): error sanity + space
+accounting, so the benchmark comparisons in Figures 4-9 are trustworthy."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines import LMFD, DIFD, SWR, SWOR
+
+
+def _stream(n, d, seed=0, R=1.0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    if R > 1:
+        A *= np.exp(rng.uniform(0, np.log(np.sqrt(R)), size=(n, 1)))
+    return A.astype(np.float32)
+
+
+def _worst(alg, A, N, eps, q=400):
+    worst = 0.0
+    for i in range(len(A)):
+        alg.update(A[i])
+        t = i + 1
+        if t % q == 0 and t >= N:
+            B = alg.query()
+            AW = A[t - N:t]
+            err = np.linalg.norm(AW.T @ AW - B.T @ B, 2)
+            worst = max(worst, err / max(np.sum(AW * AW), 1e-9))
+    return worst
+
+
+@pytest.mark.parametrize("cls,kwargs,tol", [
+    (LMFD, {}, 8.0),       # LM-FD guarantees 8ε (paper §7.1)
+    (DIFD, {}, 8.0),
+])
+def test_deterministic_baselines_error(cls, kwargs, tol):
+    n, d, N, eps = 2400, 12, 400, 1 / 8
+    A = _stream(n, d)
+    alg = cls(d, eps, N, **kwargs)
+    assert _worst(alg, A, N, eps) <= tol * eps
+
+
+@pytest.mark.parametrize("cls", [SWR, SWOR])
+def test_sampling_baselines_error(cls):
+    n, d, N, eps = 2400, 12, 400, 1 / 4
+    A = _stream(n, d)
+    alg = cls(d, ell=int(2 / eps**2), window=N, seed=0)
+    # sampling is probabilistic — generous tolerance, seeded determinism
+    assert _worst(alg, A, N, eps) <= 1.0
+
+
+def test_space_accounting_monotone_in_precision():
+    """Space grows as ε shrinks — Figure 7's x-axis sanity."""
+    n, d, N = 1500, 10, 300
+    A = _stream(n, d)
+    sizes = []
+    for eps in (1 / 4, 1 / 8, 1 / 16):
+        alg = LMFD(d, eps, N)
+        peak = 0
+        for i in range(n):
+            alg.update(A[i])
+            peak = max(peak, alg.n_rows_stored)
+        sizes.append(peak)
+    assert sizes[0] < sizes[1] < sizes[2]
+
+
+def test_swor_distinct_rows():
+    n, d, N = 800, 8, 200
+    A = _stream(n, d, seed=9)
+    alg = SWOR(d, ell=8, window=N, seed=1)
+    for i in range(n):
+        alg.update(A[i])
+    B = alg.query()
+    assert B.shape[0] <= 8
+    assert np.isfinite(B).all()

@@ -1,0 +1,79 @@
+"""FrequentDirections unit + property tests (the FD guarantee underpins every
+DS-FD theorem, so it is tested exhaustively)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fd import fd_init, fd_absorb, fd_compress, fd_merge
+from repro.core.errors import cova_error_gram
+
+
+def _run_fd(A, ell):
+    st_ = fd_absorb(fd_init(ell, A.shape[1]), jnp.asarray(A), ell=ell)
+    return np.asarray(st_.buf)
+
+
+@pytest.mark.parametrize("n,d,ell", [(200, 8, 4), (500, 32, 8), (64, 16, 16)])
+def test_fd_covariance_bound(n, d, ell):
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    B = _run_fd(A, ell)
+    err = float(cova_error_gram(jnp.asarray(A.T @ A), jnp.asarray(B)))
+    assert err <= np.sum(A * A) / ell + 1e-3
+
+
+@pytest.mark.parametrize("n,d,ell", [(300, 12, 6)])
+def test_fd_psd_underestimate(n, d, ell):
+    """FD never overestimates: AᵀA − BᵀB ⪰ 0."""
+    rng = np.random.default_rng(1)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    B = _run_fd(A, ell)
+    eigs = np.linalg.eigvalsh(A.T @ A - B.T @ B)
+    assert eigs.min() >= -1e-2 * np.sum(A * A) / n
+
+
+def test_fd_mergeable():
+    rng = np.random.default_rng(2)
+    d, ell = 16, 8
+    A1 = rng.normal(size=(100, d)).astype(np.float32)
+    A2 = rng.normal(size=(150, d)).astype(np.float32)
+    s1 = fd_absorb(fd_init(ell, d), jnp.asarray(A1), ell=ell)
+    s2 = fd_absorb(fd_init(ell, d), jnp.asarray(A2), ell=ell)
+    merged = fd_merge(s1, s2, ell=ell)
+    A = np.concatenate([A1, A2])
+    err = float(cova_error_gram(jnp.asarray(A.T @ A),
+                                jnp.asarray(merged.buf)))
+    # merged sketch obeys 2x the single-pass bound (standard FD merge result)
+    assert err <= 2.0 * np.sum(A * A) / ell
+
+
+def test_fd_compress_shape():
+    rng = np.random.default_rng(3)
+    M = rng.normal(size=(77, 10)).astype(np.float32)
+    out = fd_compress(jnp.asarray(M), 5)
+    assert out.shape == (10, 10)
+    err = float(cova_error_gram(jnp.asarray(M.T @ M), out))
+    assert err <= np.sum(M * M) / 5 + 1e-3
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(20, 120),
+    d=st.integers(4, 24),
+    ell=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 10.0),
+)
+def test_fd_bound_property(n, d, ell, seed, scale):
+    """Property: ‖AᵀA − BᵀB‖₂ ≤ ‖A‖_F²/ℓ for arbitrary streams."""
+    ell = min(ell, d)
+    rng = np.random.default_rng(seed)
+    A = (scale * rng.normal(size=(n, d))).astype(np.float32)
+    # mix in exactly-repeated and zero rows (adversarial edge cases)
+    A[rng.integers(0, n, size=n // 10)] = A[0]
+    A[rng.integers(0, n, size=n // 20)] = 0.0
+    B = _run_fd(A, ell)
+    err = float(cova_error_gram(jnp.asarray(A.T @ A), jnp.asarray(B)))
+    assert err <= np.sum(A * A) / ell + 1e-2 * scale**2

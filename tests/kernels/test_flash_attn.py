@@ -1,0 +1,89 @@
+"""Flash-attention kernel sweeps: shapes/dtypes/GQA/causal vs the pure-jnp
+oracle (interpret mode on CPU), plus custom-VJP gradient checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.kernel import flash_fwd_pallas
+from repro.kernels.flash_attn.ops import flash_attention, \
+    flash_attention_bshd
+from repro.kernels.flash_attn.ref import flash_ref
+
+
+@pytest.mark.parametrize("BH,BHkv,S,dh,causal,dtype", [
+    (4, 2, 256, 64, True, jnp.float32),
+    (4, 4, 256, 64, False, jnp.float32),
+    (2, 1, 512, 128, True, jnp.float32),
+    (8, 2, 128, 64, True, jnp.bfloat16),
+    (3, 3, 384, 64, True, jnp.float32),       # non-pow2 BH, S=3·128
+])
+def test_flash_fwd_matches_ref(BH, BHkv, S, dh, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (BH, S, dh), dtype)
+    k = jax.random.normal(ks[1], (BHkv, S, dh), dtype)
+    v = jax.random.normal(ks[2], (BHkv, S, dh), dtype)
+    o, lse = flash_fwd_pallas(q, k, v, causal=causal, cq=128, ckv=128,
+                              interpret=True)
+    o_ref, lse_ref = flash_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_custom_vjp_matches_autodiff(causal):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (4, 256, 64))
+    k = jax.random.normal(ks[1], (2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 256, 64))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention(q, k, v, causal, 128, 128)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(flash_ref(q, k, v, causal=causal)[0]))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-5, rtol=5e-4)
+
+
+def test_flash_bshd_layout_roundtrip():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, Hkv, dh = 2, 256, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, Hkv, dh))
+    v = jax.random.normal(ks[2], (B, S, Hkv, dh))
+    o = flash_attention_bshd(q, k, v, causal=True, cq=128, ckv=128)
+    from repro.models.layers.attention import full_attention
+    o_ref = full_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref, np.float32),
+                               atol=2e-5, rtol=2e-4)
+
+
+def test_flash_no_quadratic_residuals():
+    """The point of the custom VJP: no S×S tensor survives to the backward
+    as a residual.  We check the jaxpr of grad for absence of any
+    intermediate with ≥ S² elements outside the recompute loops' bodies
+    by verifying peak live-constant size stays O(S·dh)."""
+    S, dh = 512, 64
+    q = jnp.ones((2, S, dh))
+    k = jnp.ones((1, S, dh))
+    v = jnp.ones((1, S, dh))
+
+    def loss(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, 128, 128))
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
+    # residual outputs of the fwd (captured consts of bwd) stay ≤ S·dh-ish
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "custom_vjp_call":
+            for var in eqn.outvars:
+                assert np.prod(var.aval.shape) <= 4 * S * dh

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp ref.py oracles, per the kernel-validation contract."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.power_iter.ops import power_iter
+from repro.kernels.power_iter.ref import power_iter_ref
+from repro.kernels.rank1_downdate.ops import rank1_downdate
+from repro.kernels.rank1_downdate.ref import rank1_downdate_ref
+from repro.kernels.window_gram.ops import window_gram
+from repro.kernels.window_gram.ref import window_gram_ref
+
+SHAPES_MD = [(8, 64), (16, 128), (32, 300), (64, 1024), (20, 77)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram_matches_ref(m, d, dtype):
+    rng = np.random.default_rng(m * d)
+    x = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    got = gram(x, interpret=True)
+    want = gram_ref(x)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("m", [8, 16, 40, 64])
+def test_power_iter_matches_ref_and_eigh(m):
+    rng = np.random.default_rng(m)
+    A = rng.normal(size=(m, 3 * m)).astype(np.float32)
+    K = jnp.asarray(A @ A.T)
+    lam, u = power_iter(K, iters=64, interpret=True)
+    lam_r, u_r = power_iter_ref(K, iters=64)
+    np.testing.assert_allclose(float(lam), float(lam_r), rtol=1e-4)
+    np.testing.assert_allclose(np.abs(np.asarray(u)),
+                               np.abs(np.asarray(u_r)), atol=1e-3)
+    # against the true top eigenvalue
+    w = np.linalg.eigvalsh(np.asarray(K))
+    assert abs(float(lam) - w[-1]) <= 1e-2 * w[-1] + 1e-4
+
+
+@pytest.mark.parametrize("m,d", SHAPES_MD)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rank1_downdate_matches_ref(m, d, dtype):
+    rng = np.random.default_rng(m + d)
+    D = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    v = rng.normal(size=(d,))
+    v = jnp.asarray(v / np.linalg.norm(v), dtype)
+    got = rank1_downdate(D, v, interpret=True)
+    want = rank1_downdate_ref(D, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_rank1_downdate_removes_direction():
+    """After the downdate, D has zero component along v (Lemma 1)."""
+    rng = np.random.default_rng(0)
+    D = jnp.asarray(rng.normal(size=(16, 200)).astype(np.float32))
+    v = rng.normal(size=(200,)).astype(np.float32)
+    v = jnp.asarray(v / np.linalg.norm(v))
+    out = rank1_downdate(D, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(out @ v), 0.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,d", [(64, 16), (300, 52), (1000, 231), (129, 90)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_window_gram_matches_ref(n, d, dtype):
+    rng = np.random.default_rng(n)
+    A = jnp.asarray(rng.normal(size=(n, d)), dtype)
+    got = window_gram(A, interpret=True)
+    want = window_gram_ref(A)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               atol=5e-1 if dtype == jnp.bfloat16 else 1e-3)
+
+
+def test_krylov_dsfd_uses_kernels_end_to_end():
+    """DS-FD in krylov mode with use_pallas=True runs a full stream and obeys
+    the Theorem 3.1 bound (kernels wired into the real algorithm)."""
+    from repro.core.dsfd import DSFDConfig, dsfd_run_stream
+    from repro.core.errors import cova_error_gram, window_gram_np
+    rng = np.random.default_rng(2)
+    n, d, N = 400, 12, 100
+    ell = 5
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    cfg = DSFDConfig(d=d, ell=ell, window=N, cap=2 * ell + 8, mode="krylov",
+                     use_pallas=True)
+    _, outs = dsfd_run_stream(cfg, jnp.asarray(A), query_every=100)
+    outs = np.asarray(outs)
+    eps = 1.0 / ell
+    for i in range(outs.shape[0]):
+        t = i + 1
+        if t % 100:
+            continue
+        G = window_gram_np(A, t, N)
+        e = float(cova_error_gram(jnp.asarray(G), jnp.asarray(outs[i])))
+        assert e <= 4 * eps * min(t, N) + 1e-2

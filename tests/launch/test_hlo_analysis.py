@@ -1,0 +1,72 @@
+"""Unit tests for the loop-aware HLO analyzer (launch/hlo.py) — the
+roofline numbers hang off this parser, so its semantics are pinned here
+against hand-written HLO text with known ground truth."""
+
+import textwrap
+
+from repro.launch import hlo
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[8,64])) -> (s32[], f32[8,64]) {
+      %p = (s32[], f32[8,64]{1,0}) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,64]{1,0} get-tuple-element(%p), index=1
+      %c1 = s32[] constant(1)
+      %ip = s32[] add(%i, %c1)
+      %w = f32[64,64]{1,0} constant({...})
+      %d = f32[8,64]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ag = f32[8,64]{1,0} all-gather(%d), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+      ROOT %t = (s32[], f32[8,64]{1,0}) tuple(%ip, %ag)
+    }
+
+    %cond (p2: (s32[], f32[8,64])) -> pred[] {
+      %p2 = (s32[], f32[8,64]{1,0}) parameter(0)
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      %n = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i2, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,64]) -> f32[8,64] {
+      %a = f32[8,64]{1,0} parameter(0)
+      %z = s32[] constant(0)
+      %tup = (s32[], f32[8,64]{1,0}) tuple(%z, %a)
+      %wh = (s32[], f32[8,64]{1,0}) while(%tup), condition=%cond, body=%body
+      %out = f32[8,64]{1,0} get-tuple-element(%wh), index=1
+      ROOT %ar = f32[8,64]{1,0} all-reduce(%out), channel_id=2, replica_groups=[1,8]<=[8], to_apply=%body
+    }
+    """)
+
+
+def test_trip_count_and_loop_adjusted_flops():
+    stats = hlo.analyze(HLO)
+    assert stats.loop_trips.get("body") == 12
+    # dot: 2·8·64·64 per call × 12 trips
+    assert stats.matmul_flops == 12 * 2 * 8 * 64 * 64
+    assert stats.dot_calls == 12
+
+
+def test_collective_bytes_ring_model():
+    stats = hlo.analyze(HLO)
+    # in-loop all-gather: out 8·64·4 B = 2048; group 4 → ×(3/4) ×12 trips
+    ag = 2048 * 3 / 4 * 12
+    # entry all-reduce: 2 × 2048 × (7/8)
+    ar = 2 * 2048 * 7 / 8
+    assert abs(stats.collective_by_op["all-gather"] - ag) < 1e-6
+    assert abs(stats.collective_by_op["all-reduce"] - ar) < 1e-6
+    assert stats.collective_counts == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_shape_parsing():
+    assert hlo._shape_bytes("f32[8,64]{1,0}") == 8 * 64 * 4
+    assert hlo._shape_bytes("(s32[], bf16[2,3]{1,0})") == 4 + 12
+    assert hlo._shape_bytes("pred[]") == 1
+
+
+def test_roofline_terms_structure():
+    stats = hlo.analyze(HLO)
+    terms = hlo.roofline_terms(stats, chips=8)
+    assert set(["compute_s", "memory_s", "collective_s",
+                "dominant"]) <= set(terms)
+    assert terms["dominant"] in ("compute", "memory", "collective")
