@@ -85,95 +85,67 @@ def spec_err(G: np.ndarray, B: np.ndarray) -> float:
 
 
 # ---------------------------------------------------------------------------
-# DS-FD runners (jitted scans emitting query rows + live-row counts)
+# Generic stream runner over the unified SlidingSketch protocol
 # ---------------------------------------------------------------------------
 
 
-def run_dsfd(rows: np.ndarray, eps: float, window: int, *,
-             mode: str = "fast", query_every: int,
-             timestamps: Optional[np.ndarray] = None):
-    """Returns (queries: {t: B_rows}, max_live_rows, wall_s)."""
-    import jax
-    import jax.numpy as jnp
-    from repro.core.dsfd import make_config, dsfd_init, dsfd_update, \
-        dsfd_query_rows
+def run_sketch(name: str, rows: np.ndarray, *, eps: float, window: int,
+               query_every: int, timestamps: Optional[np.ndarray] = None,
+               **hyper):
+    """Stream ``rows`` through any registered sketch variant.
 
-    d = rows.shape[1]
-    cfg = make_config(d, eps, window, mode=mode)
+    Returns ``(queries: {row_index: B_rows}, max_live_rows, wall_s)`` —
+    queries are keyed by 1-based row index (emitted every ``query_every``
+    rows); expiry uses ``timestamps`` when given (time-based streams).
 
-    @functools.partial(jax.jit, static_argnames=())
-    def scan_all(data, ts):
-        def step(state, inp):
-            t, row = inp
-            state = dsfd_update(cfg, state, row, t)
-            live = (jnp.sum(state.main.snap_valid) + state.main.nbuf
-                    + jnp.sum(state.aux.snap_valid) + state.aux.nbuf)
-            out = jax.lax.cond(
-                jnp.mod(t, query_every) == 0,
-                lambda s: dsfd_query_rows(cfg, s, now=t),
-                lambda s: jnp.zeros((cfg.cap + cfg.m, cfg.d), jnp.float32),
-                state)
-            return state, (out, live)
+    JAX-backed variants run as one fused ``lax.scan`` program that also
+    emits per-step live-row counts; host (numpy) baselines run the exact
+    same protocol in a python loop.
+    """
+    from repro.sketch.api import make_sketch
 
-        state = dsfd_init(cfg)
-        return jax.lax.scan(step, state, (ts, data))
-
+    sk = make_sketch(name, d=rows.shape[1], eps=eps, window=window, **hyper)
     n = rows.shape[0]
-    ts = (jnp.asarray(timestamps, jnp.int32) if timestamps is not None
-          else jnp.arange(1, n + 1, dtype=jnp.int32))
-    t0 = time.time()
-    _, (outs, live) = scan_all(jnp.asarray(rows, jnp.float32), ts)
-    outs = np.asarray(outs)
-    live = np.asarray(live)
-    wall = time.time() - t0
-    ts_np = np.asarray(ts)
-    queries = {int(i + 1): outs[i] for i in range(n)
-               if ts_np[i] % query_every == 0}
-    return queries, int(live.max()), wall
+    ts_np = (np.asarray(timestamps, np.int64) if timestamps is not None
+             else np.arange(1, n + 1, dtype=np.int64))
 
+    if sk.meta["backend"] == "host":
+        state = sk.init()
+        queries, peak = {}, 0
+        t0 = time.time()
+        for i in range(n):
+            state = sk.update(state, rows[i], int(ts_np[i]))
+            peak = max(peak, int(sk.space(state)))
+            if (i + 1) % query_every == 0:
+                queries[i + 1] = np.asarray(sk.query_rows(state, ts_np[i]))
+        return queries, peak, time.time() - t0
 
-def run_layered(rows: np.ndarray, eps: float, window: int, R: float, *,
-                time_based: bool = False, query_every: int,
-                timestamps: Optional[np.ndarray] = None, beta: float = 4.0):
-    """Seq-DS-FD / Time-DS-FD runner.  Query index is the *row* index;
-    expiry uses the provided timestamps."""
     import jax
     import jax.numpy as jnp
-    from repro.core.seq_dsfd import (make_seq_config, make_time_config,
-                                     layered_init, layered_update,
-                                     layered_query_rows)
 
-    d = rows.shape[1]
-    mk = make_time_config if time_based else make_seq_config
-    cfg = mk(d, eps, window, R, beta=beta)
+    state0 = sk.init()
+    out_sd = jax.eval_shape(
+        lambda s: sk.query_rows(s, jnp.zeros((), jnp.int32)), state0)
 
-    @jax.jit
-    def scan_all(data, ts):
+    @functools.partial(jax.jit, static_argnames=("q",))
+    def scan_all(state, data, ts, q):
         def step(carry, inp):
             state, i = carry
             t, row = inp
-            state = layered_update(cfg, state, row, t)
-            live = (jnp.sum(state.main.snap_valid) + jnp.sum(state.main.nbuf)
-                    + jnp.sum(state.aux.snap_valid)
-                    + jnp.sum(state.aux.nbuf))
+            state = sk.update(state, row, t)
             out = jax.lax.cond(
-                jnp.mod(i + 1, query_every) == 0,
-                lambda s: layered_query_rows(cfg, s, t),
-                lambda s: jnp.zeros((cfg.base.cap + cfg.base.m, cfg.base.d),
-                                    jnp.float32),
+                jnp.mod(i + 1, q) == 0,
+                lambda s: sk.query_rows(s, t),
+                lambda s: jnp.zeros(out_sd.shape, out_sd.dtype),
                 state)
-            return (state, i + 1), (out, live)
+            return (state, i + 1), (out, sk.space(state))
 
-        state = layered_init(cfg)
-        (state, _), outs = jax.lax.scan(
-            step, (state, jnp.zeros((), jnp.int32)), (ts, data))
-        return outs
+        return jax.lax.scan(
+            step, (state, jnp.zeros((), jnp.int32)), (ts, data))[1]
 
-    n = rows.shape[0]
-    ts = (jnp.asarray(timestamps, jnp.int32) if timestamps is not None
-          else jnp.arange(1, n + 1, dtype=jnp.int32))
     t0 = time.time()
-    outs, live = scan_all(jnp.asarray(rows, jnp.float32), ts)
+    outs, live = scan_all(state0, jnp.asarray(rows, jnp.float32),
+                          jnp.asarray(ts_np, jnp.int32), query_every)
     outs = np.asarray(outs)
     live = np.asarray(live)
     wall = time.time() - t0
@@ -182,12 +154,37 @@ def run_layered(rows: np.ndarray, eps: float, window: int, R: float, *,
 
 
 # ---------------------------------------------------------------------------
-# Baseline runner (numpy classes with update/query/n_rows_stored)
+# Legacy runners — thin deprecated wrappers kept for import compatibility
 # ---------------------------------------------------------------------------
+
+
+def run_dsfd(rows: np.ndarray, eps: float, window: int, *,
+             mode: str = "fast", query_every: int,
+             timestamps: Optional[np.ndarray] = None):
+    """Deprecated: use ``run_sketch("dsfd", ...)``.
+
+    Note: queries are now keyed/emitted by 1-based *row index* (every
+    ``query_every`` rows), matching every other runner.  The old version
+    emitted on ``timestamp % query_every == 0``, which differed only for
+    streams with explicit non-contiguous ``timestamps``."""
+    return run_sketch("dsfd", rows, eps=eps, window=window,
+                      query_every=query_every, timestamps=timestamps,
+                      mode=mode)
+
+
+def run_layered(rows: np.ndarray, eps: float, window: int, R: float, *,
+                time_based: bool = False, query_every: int,
+                timestamps: Optional[np.ndarray] = None, beta: float = 4.0):
+    """Deprecated: use ``run_sketch("time-dsfd" | "seq-dsfd", ...)``."""
+    return run_sketch("time-dsfd" if time_based else "seq-dsfd", rows,
+                      eps=eps, window=window, query_every=query_every,
+                      timestamps=timestamps, R=R, beta=beta)
 
 
 def run_baseline(alg, rows: np.ndarray, *, query_every: int,
                  timestamps: Optional[np.ndarray] = None):
+    """Deprecated host loop for pre-constructed numpy baselines; new code
+    should go through ``run_sketch(name, ...)`` instead."""
     n = rows.shape[0]
     queries = {}
     peak = 0

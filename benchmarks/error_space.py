@@ -14,17 +14,16 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import (WindowOracle, eval_queries, run_baseline,
-                               run_dsfd, run_layered, write_csv)
+from benchmarks.common import WindowOracle, eval_queries, run_sketch, \
+    write_csv
 from repro.data.streams import get_stream
+from repro.sketch.api import available_sketches
 
 
 def sweep(dataset: str, *, scale: float = 0.1, seed: int = 0,
           eps_list=(1 / 4, 1 / 8, 1 / 16, 1 / 32),
           algs=("dsfd", "lmfd", "difd", "swr", "swor"),
           queries: int = 24) -> List[Dict]:
-    from repro.core.baselines import LMFD, DIFD, SWR, SWOR
-
     spec = get_stream(dataset, scale=scale, seed=seed)
     rows, N, ts = spec.rows, spec.window, spec.timestamps
     time_based = ts is not None
@@ -37,32 +36,26 @@ def sweep(dataset: str, *, scale: float = 0.1, seed: int = 0,
     for eps in eps_list:
         for alg in algs:
             try:
+                # every variant streams through the same registry entry point
+                name, hyper = alg, {}
                 if alg == "dsfd":
-                    if time_based or R > 1.001:
-                        qs, peak, wall = run_layered(
-                            rows, eps, N, R, time_based=time_based,
-                            query_every=q, timestamps=ts)
-                    else:
-                        qs, peak, wall = run_dsfd(rows, eps, N,
-                                                  query_every=q)
-                elif alg == "lmfd":
-                    qs, peak, wall = run_baseline(
-                        LMFD(spec.d, eps, N), rows, query_every=q,
-                        timestamps=ts)
+                    if time_based:
+                        name, hyper = "time-dsfd", {"R": R}
+                    elif R > 1.001:
+                        name, hyper = "seq-dsfd", {"R": R}
                 elif alg == "difd":
                     if time_based:
                         continue        # DI-FD is sequence-based only (§2.2)
-                    qs, peak, wall = run_baseline(
-                        DIFD(spec.d, eps, N, R=R), rows, query_every=q,
-                        timestamps=ts)
+                    hyper = {"R": R}
+                elif alg in ("seq-dsfd", "time-dsfd"):
+                    hyper = {"R": R}
                 elif alg in ("swr", "swor"):
-                    ell = int(min(max(4 / eps ** 2, 8), 4096))
-                    cls = SWR if alg == "swr" else SWOR
-                    qs, peak, wall = run_baseline(
-                        cls(spec.d, ell=ell, window=N, seed=seed), rows,
-                        query_every=q, timestamps=ts)
-                else:
+                    hyper = {"seed": seed}
+                if name not in available_sketches():
                     continue
+                qs, peak, wall = run_sketch(name, rows, eps=eps, window=N,
+                                            query_every=q, timestamps=ts,
+                                            **hyper)
                 avg, worst = eval_queries(oracle, qs, min_t=min_t)
                 out.append({
                     "dataset": spec.name, "alg": alg, "inv_eps": round(1 / eps),

@@ -6,23 +6,21 @@ from __future__ import annotations
 import argparse
 from typing import Dict, List
 
-from benchmarks.common import run_baseline, run_layered, write_csv
+from benchmarks.common import run_sketch, write_csv
 from repro.data.streams import get_stream
 
 
 def sweep(dataset: str = "rail", *, scale: float = 0.05, seed: int = 0,
           eps_list=(1 / 4, 1 / 8, 1 / 16, 1 / 32)) -> List[Dict]:
-    from repro.core.baselines import LMFD
-
     spec = get_stream(dataset, scale=scale, seed=seed)
     rows, N, ts = spec.rows, spec.window, spec.timestamps
     q = max(len(rows) // 8, 1)
     out = []
     for eps in eps_list:
-        _, peak_ds, _ = run_layered(rows, eps, N, spec.R, time_based=True,
-                                    query_every=q, timestamps=ts)
-        _, peak_lm, _ = run_baseline(LMFD(spec.d, eps, N), rows,
-                                     query_every=q, timestamps=ts)
+        _, peak_ds, _ = run_sketch("time-dsfd", rows, eps=eps, window=N,
+                                   R=spec.R, query_every=q, timestamps=ts)
+        _, peak_lm, _ = run_sketch("lmfd", rows, eps=eps, window=N,
+                                   query_every=q, timestamps=ts)
         out.append({"dataset": spec.name, "inv_eps": round(1 / eps),
                     "dsfd_rows": peak_ds, "lmfd_rows": peak_lm})
         print(f"  {spec.name} 1/eps={1/eps:4.0f} DS-FD={peak_ds:6d} "

@@ -11,7 +11,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import run_baseline, write_csv
+from benchmarks.common import write_csv
 from repro.data.streams import get_stream
 
 
@@ -19,9 +19,7 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
           seed: int = 0, n_queries: int = 10) -> List[Dict]:
     import jax
     import jax.numpy as jnp
-    from repro.core.baselines import LMFD, DIFD, SWR, SWOR
-    from repro.core.dsfd import (make_config, dsfd_init, dsfd_update,
-                                 dsfd_query)
+    from repro.sketch.api import make_sketch
 
     spec = get_stream(dataset, scale=scale, seed=seed)
     rows, N = spec.rows, spec.window
@@ -29,23 +27,24 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
     q = max(n // n_queries, 1)
     out = []
 
-    # numpy baselines
-    for name, alg in [
-        ("LM-FD", LMFD(spec.d, eps, N)),
-        ("DI-FD", DIFD(spec.d, eps, N, R=spec.R)),
-        ("SWR", SWR(spec.d, ell=min(int(4 / eps ** 2), 2048), window=N,
-                    seed=seed)),
-        ("SWOR", SWOR(spec.d, ell=min(int(4 / eps ** 2), 2048), window=N,
-                      seed=seed)),
-    ]:
+    # host baselines — same SlidingSketch protocol, timed per update/query
+    host = [
+        ("LM-FD", "lmfd", {}),
+        ("DI-FD", "difd", {"R": spec.R}),
+        ("SWR", "swr", {"ell": min(int(4 / eps ** 2), 2048), "seed": seed}),
+        ("SWOR", "swor", {"ell": min(int(4 / eps ** 2), 2048), "seed": seed}),
+    ]
+    for name, reg, hyper in host:
+        sk = make_sketch(reg, d=spec.d, eps=eps, window=N, **hyper)
+        st = sk.init()
         t0 = time.time()
         tq = 0.0
         nq = 0
         for i in range(n):
-            alg.update(rows[i], i + 1)
+            st = sk.update(st, rows[i], i + 1)
             if (i + 1) % q == 0:
                 tq0 = time.time()
-                alg.query()
+                sk.query_rows(st, i + 1)
                 tq += time.time() - tq0
                 nq += 1
         wall = time.time() - t0 - tq
@@ -53,14 +52,14 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
                     "query_ms": 1e3 * tq / max(nq, 1)})
 
     # DS-FD — per-row jitted step (paper's algorithm, honest per-op cost)
-    cfg = make_config(spec.d, eps, N, mode="fast")
-    step = jax.jit(lambda st, r, t: dsfd_update(cfg, st, r, t))
-    query = jax.jit(lambda st: dsfd_query(cfg, st))
-    st = dsfd_init(cfg)
+    sk = make_sketch("dsfd", d=spec.d, eps=eps, window=N, mode="fast")
+    step = jax.jit(sk.update)
+    query = jax.jit(sk.query)
+    st = sk.init()
     data = jnp.asarray(rows[: min(n, 3 * N)], jnp.float32)
     st = step(st, data[0], 1)  # compile
     jax.block_until_ready(st)
-    query(st)
+    query(st, 1)
     t0 = time.time()
     m = min(len(data), 4000)
     for i in range(1, m):
@@ -69,15 +68,15 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
     upd_ms = 1e3 * (time.time() - t0) / (m - 1)
     t0 = time.time()
     for _ in range(max(n_queries, 5)):
-        b = query(st)
+        b = query(st, m)
     jax.block_until_ready(b)
     q_ms = 1e3 * (time.time() - t0) / max(n_queries, 5)
     out.append({"alg": "DS-FD(step)", "update_ms": upd_ms,
                 "query_ms": q_ms})
 
     # DS-FD — fused scan (deployment mode: whole stream in one XLA program)
-    from benchmarks.common import run_dsfd
-    _, _, wall = run_dsfd(rows, eps, N, query_every=q)
+    from benchmarks.common import run_sketch
+    _, _, wall = run_sketch("dsfd", rows, eps=eps, window=N, query_every=q)
     out.append({"alg": "DS-FD(scan)", "update_ms": 1e3 * wall / n,
                 "query_ms": float("nan")})
 

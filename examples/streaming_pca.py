@@ -1,20 +1,20 @@
 """Sliding-window PCA / drift detection — the paper's motivating
 application (§1: real-time PCA, event detection, fault monitoring).
 
-A sensor-like stream switches regime halfway through; the DS-FD sketch
-tracks the windowed top subspace, and the principal-angle drift between
-consecutive window sketches spikes exactly at the change point — with
-O(d/ε) memory instead of buffering the whole window.
+A sensor-like stream switches regime halfway through; a DS-FD sketch built
+through the unified ``SlidingSketch`` API tracks the windowed top subspace,
+and the principal-angle drift between consecutive window sketches spikes
+exactly at the change point — with O(d/ε) memory instead of buffering the
+whole window.  Swapping ``"dsfd"`` for any other registry name changes the
+sketch, not the code.
 
 Run:  PYTHONPATH=src python examples/streaming_pca.py
 """
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core.dsfd import (make_config, dsfd_init, dsfd_update,
-                             dsfd_query_rows)
+from repro.sketch.api import make_sketch
 from repro.sketch.basis import topr_basis
 
 n, d, N, eps, r = 8000, 48, 1000, 1 / 8, 3
@@ -29,30 +29,19 @@ A = np.where(np.arange(n)[:, None] < n // 2,
              coef @ U_a.T + noise, coef @ U_b.T + noise)
 A /= np.linalg.norm(A, axis=1, keepdims=True)
 
-cfg = make_config(d, eps, N, mode="fast")
+sk = make_sketch("dsfd", d=d, eps=eps, window=N, mode="fast")
 
-
-@jax.jit
-def scan(data):
-    def step(state, inp):
-        t, row = inp
-        state = dsfd_update(cfg, state, row, t)
-        out = jax.lax.cond(
-            jnp.mod(t, 250) == 0,
-            lambda s: dsfd_query_rows(cfg, s),
-            lambda s: jnp.zeros((cfg.cap + cfg.m, cfg.d), jnp.float32),
-            state)
-        return state, out
-
-    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
-    return jax.lax.scan(step, dsfd_init(cfg), (ts, data))[1]
-
-
-outs = np.asarray(scan(jnp.asarray(A)))
+# absorb the stream in 250-row blocks; each block is one jitted scan, and
+# the windowed subspace is queried at every block boundary.
+state = sk.init()
+data = jnp.asarray(A)
 prev_V = None
 print("   t   top-3 window eigvals        drift vs prev window")
-for t in range(250, n + 1, 250):
-    lam, V = topr_basis(jnp.asarray(outs[t - 1]), r)
+for t0 in range(0, n, 250):
+    ts = jnp.arange(t0 + 1, t0 + 251, dtype=jnp.int32)
+    state = sk.update_block(state, data[t0:t0 + 250], ts)
+    t = t0 + 250
+    lam, V = topr_basis(sk.query_rows(state, t), r)
     lam, V = np.asarray(lam), np.asarray(V)
     drift = np.nan
     if prev_V is not None:
@@ -63,7 +52,7 @@ for t in range(250, n + 1, 250):
     prev_V = V
 
 # the window fully inside regime B must align with U_b
-lam, V = topr_basis(jnp.asarray(outs[-1]), r)
+lam, V = topr_basis(sk.query_rows(state, n), r)
 overlap = np.linalg.norm(np.asarray(V) @ U_b, 2)
 print(f"\nfinal window subspace ⋅ true regime-B basis: {overlap:.3f} (→1)")
 assert overlap > 0.9

@@ -23,4 +23,19 @@ __all__ = [
     "layered_update", "layered_query", "layered_query_rows",
     "layered_select", "layered_run_stream",
     "errors",
+    # unified protocol (lazily re-exported from repro.sketch.api)
+    "SlidingSketch", "make_sketch", "register", "vmap_streams",
+    "available_sketches",
 ]
+
+_API_NAMES = ("SlidingSketch", "make_sketch", "register", "vmap_streams",
+              "available_sketches")
+
+
+def __getattr__(name):
+    """Lazy re-export of the unified SlidingSketch API (PEP 562) — keeps
+    ``repro.core`` import-light and avoids a core↔sketch import cycle."""
+    if name in _API_NAMES:
+        from repro.sketch import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

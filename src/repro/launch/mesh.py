@@ -8,15 +8,31 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kw(n_axes: int) -> dict:
+    """``axis_types=`` kwarg when this jax has explicit axis types (≥ 0.5);
+    empty on older releases where every mesh axis is implicitly Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh_compat(shape, axes):
+    """Version-portable ``jax.make_mesh`` with Auto axis types."""
+    return jax.make_mesh(shape, axes, **_axis_type_kw(len(axes)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for subprocess-based multi-device tests."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((n_data, n_model), ("data", "model"))
+
+
+def make_host_mesh():
+    """All local devices on 'data', no model parallelism."""
+    return make_mesh_compat((len(jax.devices()), 1), ("data", "model"))

@@ -37,7 +37,7 @@ def main() -> None:
                         format="%(asctime)s %(name)s %(message)s")
 
     from repro.configs.base import get_config
-    from repro.launch.mesh import make_production_mesh
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
     from repro.train.loop import LoopConfig, train
     from repro.train.train_step import TrainStepConfig
 
@@ -45,9 +45,7 @@ def main() -> None:
     if not args.full:
         cfg = cfg.reduced()
     if args.mesh == "host":
-        n = len(jax.devices())
-        mesh = jax.make_mesh((n, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_host_mesh()
     else:
         mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
 

@@ -86,11 +86,6 @@ class ServeEngine:
         tok, caches1 = self._prefill_b1(self.params,
                                         {"tokens": jnp.asarray(prompt)})
         # splice the single-request caches into slot `slot`
-        def splice(big, one):
-            if one.ndim == 0 or big.shape[1:] == one.shape[1:] is False:
-                pass
-            return big
-
         self.caches = _splice_caches(self.cfg, self.caches, caches1, slot,
                                      self.ecfg.s_max)
         self.tokens = self.tokens.at[slot].set(tok[0])

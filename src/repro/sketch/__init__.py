@@ -1,5 +1,8 @@
 """DS-FD integrated into distributed training (DESIGN.md §2b):
 
+* ``api``      — the unified ``SlidingSketch`` protocol + registry: every
+  sketch variant (DS-FD family and baselines) behind one
+  init/update/update_block/query_rows/query/space contract.
 * ``monitor``  — SlidingGradSketch: windowed streaming PCA of gradients.
 * ``compress`` — FD low-rank gradient compression with error feedback for
   the cross-pod all-reduce.
@@ -7,6 +10,8 @@
   curvature forgetting).
 """
 
+from repro.sketch.api import SlidingSketch, available_sketches, \
+    make_sketch, register, vmap_streams                         # noqa: F401
 from repro.sketch.monitor import SketchConfig, sketch_init, sketch_update, \
     sketch_query, subspace_drift                                # noqa: F401
 from repro.sketch.compress import CompressConfig, compress_grads, \

@@ -1,0 +1,414 @@
+"""Unified ``SlidingSketch`` API — one protocol + registry for every sketch
+variant in the repo (the paper's algorithms and the baselines it compares
+against).
+
+Every sketch answers the same question — approximate ``A_WᵀA_W`` over a
+sliding window — so every sketch exposes the same optax-style bundle of
+pure functions:
+
+=================  =========================================================
+protocol method    paper mapping
+=================  =========================================================
+``init(t0=1)``     fresh state (Algorithm 1 initialisation / ring buffers)
+``update(s,a,t)``  one-row sliding-window update — Algorithm 2 (exact
+                   cadence), Algorithm 3 (Fast-DS-FD trigger), Algorithm 6
+                   (layered dispatch with heavy-row bypass)
+``update_block``   ``(s, rows, ts) → s``: absorb a whole ``(B, d)`` block
+                   via one internal ``lax.scan``, jit-compiled once — the
+                   deployment cadence (not in the paper; semantics are
+                   exactly B repeated ``update`` calls)
+``query_rows``     ``(s, t) → B_W`` stacked live snapshot + residual rows —
+                   Algorithm 4 line 1 / Algorithm 7 lines 1-2 (layer select
+                   then stack)
+``query``          ``(s, t) → FD_ℓ(B_W)`` compressed ``2ℓ×d`` sketch —
+                   Algorithm 4's return / Algorithm 7 line 3
+``space(s)``       live stored-row count — the quantity plotted in the
+                   paper's space figures (Figures 4-9, Theorems 3.2/4.1/5.1)
+=================  =========================================================
+
+JAX-backed variants (``"fd"``, ``"dsfd"``, ``"seq-dsfd"``, ``"time-dsfd"``)
+are pure functions over pytree states, so they compose with ``jax.jit`` /
+``lax.scan`` / ``jax.vmap``:  ``vmap_streams(sk, S)`` lifts a sketch to S
+independent streams updated in one fused XLA program (the serving-scale
+path).  The numpy baselines (``"lmfd"``, ``"difd"``, ``"swr"``, ``"swor"``)
+satisfy the same protocol through a host-side adapter whose "state" is the
+mutable python object itself (returned back from ``update`` so call sites
+are written identically).
+
+Registry::
+
+    sk = make_sketch("dsfd", d=64, eps=1/8, window=1024, mode="fast")
+    state = sk.init()
+    state = sk.update_block(state, rows, ts)       # (B, d), (B,) int32
+    B_W   = sk.query(state, t)                      # (2ℓ, d)
+
+``make_sketch`` memoizes on its (hashable) arguments, so repeated
+construction re-uses the same jitted ``update_block``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dsfd import (dsfd_init, dsfd_query_rows, dsfd_update,
+                             make_config)
+from repro.core.fd import fd_compress, fd_init, fd_update
+from repro.core.seq_dsfd import (layered_init, layered_query_rows,
+                                 layered_update, make_seq_config,
+                                 make_time_config)
+
+
+class SlidingSketch(NamedTuple):
+    """Bundle of pure functions implementing the sliding-sketch protocol.
+
+    Fields ``init / update / update_block / query_rows / query / space`` are
+    the protocol (see module docstring); ``meta`` carries static facts about
+    the instance (``d``, ``eps``, ``window``, ``ell``, ``backend``:
+    ``"jax"`` | ``"host"``) for harnesses that need them.
+    """
+
+    name: str
+    meta: Dict[str, Any]
+    init: Callable[..., Any]
+    update: Callable[[Any, Any, Any], Any]
+    update_block: Callable[[Any, Any, Any], Any]
+    query_rows: Callable[..., Any]
+    query: Callable[..., Any]
+    space: Callable[[Any], Any]
+
+
+_REGISTRY: Dict[str, Callable[..., SlidingSketch]] = {}
+_CACHE: Dict[Tuple, SlidingSketch] = {}
+
+
+def register(name: str) -> Callable:
+    """Register a builder ``fn(d, eps, window, **hyper) -> SlidingSketch``."""
+
+    def deco(fn: Callable[..., SlidingSketch]) -> Callable[..., SlidingSketch]:
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def available_sketches() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
+                window: int = 1024, **hyper) -> SlidingSketch:
+    """Construct a registered sketch variant behind the unified protocol.
+
+    Memoized on (name, d, eps, window, hyper) when hashable, so the jitted
+    ``update_block`` of JAX variants compiles once per configuration.
+    """
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown sketch {name!r}; available: {available_sketches()}")
+    try:
+        key = (name, int(d), float(eps), int(window),
+               tuple(sorted(hyper.items())))
+        cached = _CACHE.get(key)
+    except TypeError:           # unhashable hyperparameter → skip the cache
+        key, cached = None, None
+    if cached is not None:
+        return cached
+    sk = _REGISTRY[name](int(d), float(eps), int(window), **hyper)
+    if key is not None:
+        _CACHE[key] = sk
+    return sk
+
+
+# ---------------------------------------------------------------------------
+# JAX-backed variants
+# ---------------------------------------------------------------------------
+
+
+def _block_scan(update: Callable) -> Callable:
+    """Lift a one-row ``update(state, row, t)`` into a jitted block absorb."""
+
+    @jax.jit
+    def update_block(state, rows, ts):
+        ts = jnp.asarray(ts, jnp.int32)
+
+        def step(st, inp):
+            t, row = inp
+            return update(st, row, t), None
+
+        return jax.lax.scan(step, state, (ts, rows))[0]
+
+    return update_block
+
+
+@register("fd")
+def _make_fd(d: int, eps: float, window: int, **_) -> SlidingSketch:
+    """Plain FrequentDirections (Ghashami et al. 2016) — the whole-stream
+    primitive, no expiry.  ``window`` is ignored; registered so consumers can
+    opt out of sliding semantics without changing call sites."""
+    ell = int(min(max(round(1.0 / eps), 1), d))
+
+    def update(state, row, t):
+        del t
+        return fd_update(state, row, ell=ell)
+
+    def query_rows(state, t=None):
+        del t
+        return state.buf
+
+    def space(state):
+        return state.nbuf
+
+    return SlidingSketch(
+        name="fd",
+        meta={"d": d, "eps": eps, "window": window, "ell": ell,
+              "backend": "jax"},
+        init=lambda t0=1: fd_init(ell, d),
+        update=update,
+        update_block=_block_scan(update),
+        query_rows=query_rows,
+        query=query_rows,       # the FD buffer is already the 2ℓ×d sketch
+        space=space,
+    )
+
+
+@register("dsfd")
+def _make_dsfd(d: int, eps: float, window: int, *, mode: str = "fast",
+               beta: float = 4.0, use_pallas: bool = False,
+               **_) -> SlidingSketch:
+    """DS-FD (Algorithms 2-4; ``mode`` picks the §3.1 cadence)."""
+    cfg = make_config(d, eps, window, mode=mode, beta=beta,
+                      use_pallas=use_pallas)
+
+    def update(state, row, t):
+        return dsfd_update(cfg, state, row, t)
+
+    def query_rows(state, t=None):
+        return dsfd_query_rows(cfg, state, now=t)
+
+    def query(state, t=None):
+        return fd_compress(query_rows(state, t), cfg.ell)
+
+    def space(state):
+        return (jnp.sum(state.main.snap_valid) + state.main.nbuf
+                + jnp.sum(state.aux.snap_valid) + state.aux.nbuf)
+
+    return SlidingSketch(
+        name="dsfd",
+        meta={"d": d, "eps": eps, "window": window, "ell": cfg.ell,
+              "backend": "jax", "cfg": cfg},
+        init=lambda t0=1: dsfd_init(cfg, t0),
+        update=update,
+        update_block=_block_scan(update),
+        query_rows=query_rows,
+        query=query,
+        space=space,
+    )
+
+
+def _make_layered(name: str, cfg, d, eps, window) -> SlidingSketch:
+    def update(state, row, t):
+        return layered_update(cfg, state, row, t)
+
+    def query_rows(state, t=None):
+        if t is None:
+            raise ValueError(
+                f"{name} queries need an explicit query time t (layer "
+                "selection is time-dependent, Algorithm 7 line 1)")
+        return layered_query_rows(cfg, state, t)
+
+    def query(state, t=None):
+        return fd_compress(query_rows(state, t), cfg.base.ell)
+
+    def space(state):
+        return (jnp.sum(state.main.snap_valid) + jnp.sum(state.main.nbuf)
+                + jnp.sum(state.aux.snap_valid) + jnp.sum(state.aux.nbuf))
+
+    return SlidingSketch(
+        name=name,
+        meta={"d": d, "eps": eps, "window": window, "ell": cfg.base.ell,
+              "backend": "jax", "cfg": cfg},
+        init=lambda t0=1: layered_init(cfg, t0),
+        update=update,
+        update_block=_block_scan(update),
+        query_rows=query_rows,
+        query=query,
+        space=space,
+    )
+
+
+@register("seq-dsfd")
+def _make_seq_dsfd(d: int, eps: float, window: int, *, R: float = 64.0,
+                   beta: float = 4.0, mode: str = "fast",
+                   **_) -> SlidingSketch:
+    """Seq-DS-FD (Algorithms 5-7): unnormalized rows ‖a‖² ∈ [1, R]."""
+    cfg = make_seq_config(d, eps, window, R, beta=beta, mode=mode)
+    return _make_layered("seq-dsfd", cfg, d, eps, window)
+
+
+@register("time-dsfd")
+def _make_time_dsfd(d: int, eps: float, window: int, *, R: float = 64.0,
+                    beta: float = 4.0, mode: str = "fast",
+                    **_) -> SlidingSketch:
+    """Time-DS-FD (§5): time-based windows, idle ticks are zero rows."""
+    cfg = make_time_config(d, eps, window, R, beta=beta, mode=mode)
+    return _make_layered("time-dsfd", cfg, d, eps, window)
+
+
+# ---------------------------------------------------------------------------
+# Host-side (numpy) baselines behind the same protocol
+# ---------------------------------------------------------------------------
+
+
+def _host_sketch(name: str, ctor: Callable[[], Any],
+                 meta: Dict[str, Any]) -> SlidingSketch:
+    """Adapter: numpy ``.update()/.query()/.n_rows_stored`` classes → the
+    protocol.  The state *is* the mutable object; ``update`` returns it so
+    call sites read identically to the pure-functional variants."""
+
+    def init(t0=1):
+        del t0
+        return ctor()
+
+    def update(state, row, t):
+        state.update(np.asarray(row), int(t))
+        return state
+
+    def update_block(state, rows, ts):
+        rows = np.asarray(rows)
+        ts = np.asarray(ts)
+        for i in range(rows.shape[0]):
+            state.update(rows[i], int(ts[i]))
+        return state
+
+    def query_rows(state, t=None):
+        del t                       # host baselines track time internally
+        return state.query()
+
+    def space(state):
+        return state.n_rows_stored
+
+    return SlidingSketch(
+        name=name,
+        meta=dict(meta, backend="host"),
+        init=init,
+        update=update,
+        update_block=update_block,
+        query_rows=query_rows,
+        query=query_rows,           # baseline queries are already compressed
+        space=space,
+    )
+
+
+@register("lmfd")
+def _make_lmfd(d: int, eps: float, window: int, *,
+               blocks_per_level: int | None = None, **_) -> SlidingSketch:
+    """LM-FD — FD in the Exponential Histogram framework (§2.2)."""
+    from repro.core.baselines import LMFD
+
+    return _host_sketch(
+        "lmfd",
+        lambda: LMFD(d, eps, window, blocks_per_level=blocks_per_level),
+        {"d": d, "eps": eps, "window": window,
+         "ell": int(max(1, min(round(1.0 / eps), d)))})
+
+
+@register("difd")
+def _make_difd(d: int, eps: float, window: int, *, R: float = 1.0,
+               **_) -> SlidingSketch:
+    """DI-FD — FD over dyadic intervals (§2.2); sequence-based only."""
+    from repro.core.baselines import DIFD
+
+    return _host_sketch(
+        "difd", lambda: DIFD(d, eps, window, R=R),
+        {"d": d, "eps": eps, "window": window,
+         "ell": int(max(1, min(round(1.0 / eps), d)))})
+
+
+def _sampler_ell(eps: float, ell: int | None) -> int:
+    return int(ell if ell is not None else min(max(4.0 / eps ** 2, 8), 4096))
+
+
+@register("swr")
+def _make_swr(d: int, eps: float, window: int, *, ell: int | None = None,
+              seed: int = 0, **_) -> SlidingSketch:
+    """SWR — sliding-window row sampling with replacement (§7 baselines)."""
+    from repro.core.baselines import SWR
+
+    k = _sampler_ell(eps, ell)
+    return _host_sketch(
+        "swr", lambda: SWR(d, ell=k, window=window, seed=seed),
+        {"d": d, "eps": eps, "window": window, "ell": k})
+
+
+@register("swor")
+def _make_swor(d: int, eps: float, window: int, *, ell: int | None = None,
+               seed: int = 0, **_) -> SlidingSketch:
+    """SWOR — sampling without replacement (Efraimidis–Spirakis keys)."""
+    from repro.core.baselines import SWOR
+
+    k = _sampler_ell(eps, ell)
+    return _host_sketch(
+        "swor", lambda: SWOR(d, ell=k, window=window, seed=seed),
+        {"d": d, "eps": eps, "window": window, "ell": k})
+
+
+# ---------------------------------------------------------------------------
+# Multi-stream lifting (the serving-scale path)
+# ---------------------------------------------------------------------------
+
+
+def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
+    """Lift a JAX-backed sketch to ``streams`` independent streams.
+
+    State leaves gain a leading ``(S, ...)`` axis; ``update`` takes
+    ``(S, d)`` rows and ``(S,)`` timestamps; ``update_block`` takes
+    ``(S, B, d)`` rows and ``(B,)`` or ``(S, B)`` timestamps and runs all
+    streams in **one fused XLA program** (one ``vmap`` over the jitted
+    block scan — this is how millions of per-user sketches are served).
+    ``query_rows`` / ``query`` broadcast a scalar query time across streams.
+    """
+    if sk.meta.get("backend") != "jax":
+        raise ValueError(
+            f"vmap_streams requires a JAX-backed sketch, got {sk.name!r} "
+            f"(backend={sk.meta.get('backend')!r})")
+    S = int(streams)
+
+    def init(t0=1):
+        one = sk.init(t0)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (S,) + jnp.shape(x)), one)
+
+    v_update = jax.vmap(sk.update)
+    v_block = jax.jit(jax.vmap(sk.update_block, in_axes=(0, 0, 0)))
+
+    def update(state, rows, ts):
+        ts = jnp.broadcast_to(jnp.asarray(ts, jnp.int32), (S,))
+        return v_update(state, rows, ts)
+
+    def update_block(state, rows, ts):
+        ts = jnp.asarray(ts, jnp.int32)
+        if ts.ndim == 1:
+            ts = jnp.broadcast_to(ts, (S, ts.shape[0]))
+        return v_block(state, rows, ts)
+
+    def query_rows(state, t=None):
+        return jax.vmap(lambda s: sk.query_rows(s, t))(state)
+
+    def query(state, t=None):
+        return jax.vmap(lambda s: sk.query(s, t))(state)
+
+    return SlidingSketch(
+        name=f"vmap[{sk.name}x{S}]",
+        meta=dict(sk.meta, streams=S),
+        init=init,
+        update=update,
+        update_block=update_block,
+        query_rows=query_rows,
+        query=query,
+        space=jax.vmap(sk.space),
+    )

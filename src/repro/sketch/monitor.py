@@ -21,8 +21,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsfd import (DSFDConfig, DSFDState, dsfd_init, dsfd_update,
-                             dsfd_query_rows, make_config)
+from repro.sketch.api import SlidingSketch, make_sketch
 from repro.sketch.basis import topr_basis
 
 _P1 = jnp.uint32(2654435761)          # Knuth multiplicative hashes
@@ -36,12 +35,9 @@ class SketchConfig:
     window: int = 256                 # sliding window, in train steps
     mode: str = "fast"
 
-    def dsfd(self) -> DSFDConfig:
-        return make_config(self.d, self.eps, self.window, mode=self.mode)
-
-
-class MonitorState(Tuple):
-    pass
+    def sketch(self) -> SlidingSketch:
+        return make_sketch("dsfd", d=self.d, eps=self.eps,
+                           window=self.window, mode=self.mode)
 
 
 def _leaf_seed(path: str) -> int:
@@ -66,7 +62,9 @@ def project_grads(cfg: SketchConfig, grads) -> jax.Array:
 
 
 def sketch_init(cfg: SketchConfig) -> Dict:
-    return {"dsfd": dsfd_init(cfg.dsfd()),
+    """Monitor state: a plain dict — the unified sketch state plus the
+    rolling raw-norm history."""
+    return {"dsfd": cfg.sketch().init(),
             "norm_hist": jnp.zeros((cfg.window,), jnp.float32)}
 
 
@@ -75,12 +73,12 @@ def sketch_update(cfg: SketchConfig, state: Optional[Dict], grads,
     """Feed one step's gradients; returns (state, metrics)."""
     if state is None:
         state = sketch_init(cfg)
-    dcfg = cfg.dsfd()
+    sk = cfg.sketch()
     row = project_grads(cfg, grads)
     norm = jnp.linalg.norm(row)
     unit = row / jnp.maximum(norm, 1e-30)
     now = jnp.asarray(step, jnp.int32) + 1
-    dsfd = dsfd_update(dcfg, state["dsfd"], unit, now)
+    dsfd = sk.update(state["dsfd"], unit, now)
     hist = state["norm_hist"].at[jnp.mod(now, cfg.window)].set(norm)
     metrics = {
         "sketch/grad_norm_proj": norm,
@@ -92,7 +90,7 @@ def sketch_update(cfg: SketchConfig, state: Optional[Dict], grads,
 
 def sketch_query(cfg: SketchConfig, state: Dict, r: int = 8):
     """Top-r windowed gradient directions + eigenvalues."""
-    rows = dsfd_query_rows(cfg.dsfd(), state["dsfd"])
+    rows = cfg.sketch().query_rows(state["dsfd"])
     return topr_basis(rows, r)
 
 

@@ -22,9 +22,8 @@ from typing import Any, Dict, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsfd import (dsfd_init, dsfd_update, dsfd_query_rows,
-                             make_config)
 from repro.core.fd import fd_compress
+from repro.sketch.api import SlidingSketch, make_sketch
 from repro.sketch.basis import topr_basis
 from repro.train.optimizer import Optimizer
 
@@ -41,8 +40,9 @@ class SketchyConfig:
     min_dim: int = 8                 # cols below this → diagonal path
     warmup: int = 20
 
-    def dsfd(self, d: int):
-        return make_config(d, self.eps, self.window * self.summary_rows,
+    def sketch(self, d: int) -> SlidingSketch:
+        return make_sketch("dsfd", d=d, eps=self.eps,
+                           window=self.window * self.summary_rows,
                            mode="fast")
 
 
@@ -59,7 +59,7 @@ def _sketched(p, cfg: SketchyConfig) -> bool:
 def sketchy_dsfd(cfg: SketchyConfig = SketchyConfig()) -> Optimizer:
     def init(params):
         def sk(p):
-            return (dsfd_init(cfg.dsfd(p.shape[-1]))
+            return (cfg.sketch(p.shape[-1]).init()
                     if _sketched(p, cfg) else None)
 
         def dg(p):
@@ -88,7 +88,7 @@ def sketchy_dsfd(cfg: SketchyConfig = SketchyConfig()) -> Optimizer:
                 upd = gf / jnp.maximum(jnp.sqrt(dg2), 1e-8)
             else:
                 d = p.shape[-1]
-                dcfg = cfg.dsfd(d)
+                sliding = cfg.sketch(d)
                 g2 = gf.reshape(-1, d)
                 # feed FD-compressed row summary, unit-normalized
                 summary = fd_compress(
@@ -97,9 +97,10 @@ def sketchy_dsfd(cfg: SketchyConfig = SketchyConfig()) -> Optimizer:
                 nrm = jnp.linalg.norm(summary, axis=1, keepdims=True)
                 unit = summary / jnp.maximum(nrm, 1e-30)
                 base = step.astype(jnp.int32) * cfg.summary_rows + 1
-                for j in range(cfg.summary_rows):
-                    sk = dsfd_update(dcfg, sk, unit[j], base + j)
-                rows = dsfd_query_rows(dcfg, sk)
+                # one fused block absorb instead of a per-row python loop
+                sk = sliding.update_block(
+                    sk, unit, base + jnp.arange(cfg.summary_rows))
+                rows = sliding.query_rows(sk)
                 lam, V = topr_basis(rows, cfg.rank)      # directions only
                 # rescale eigenvalues from unit rows to gradient energy
                 lam = lam * scale2 / jnp.maximum(jnp.sum(lam), 1e-30)

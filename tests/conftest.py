@@ -1,0 +1,42 @@
+"""Shared test fixtures/shims.
+
+The container may lack ``hypothesis`` (it is an optional test dependency —
+see ``pyproject.toml``).  Rather than erroring at collection and taking the
+whole module's non-property tests down with it, install a stub that lets the
+modules import and marks every ``@given`` test as skipped.  When the real
+package is present it is used untouched.
+"""
+
+import sys
+import types
+
+import pytest
+
+try:
+    import hypothesis  # noqa: F401 — real package wins when available
+except ImportError:
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def _decorator_factory(*_a, **_k):
+        def deco(fn):
+            return _SKIP(fn)
+        return deco
+
+    class _SelfCall:
+        """Callable that absorbs any call/attribute and returns itself, so
+        module-level strategy expressions (``st.integers(...)``,
+        ``@st.composite`` + call) evaluate without the real package."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _decorator_factory
+    _hyp.settings = _decorator_factory
+    _hyp.strategies = _SelfCall()
+    _hyp.HealthCheck = _SelfCall()
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _hyp.strategies
