@@ -153,6 +153,42 @@ def run_sketch(name: str, rows: np.ndarray, *, eps: float, window: int,
     return queries, int(live.max()), wall
 
 
+def run_fleet(name: str, streams_rows: np.ndarray, *, eps: float,
+              window: int, shard: bool = True, **hyper):
+    """Stream an ``(S, n, d)`` fleet through ``shard_streams`` (or
+    ``vmap_streams`` when ``shard=False``), one program call for the whole
+    fleet.  Returns ``(rows_per_sec, wall_s, state, fleet)`` — wall time
+    excludes compilation (one full same-shape warmup pass; ``update_block``
+    is jitted per block shape, so a smaller warmup would not populate the
+    compile cache).  JAX-backed variants only — host baselines have no
+    fleet path (stream them one at a time via ``run_sketch``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.sketch.api import make_sketch, shard_streams, vmap_streams
+
+    S, n, d = streams_rows.shape
+    sk = make_sketch(name, d=d, eps=eps, window=window, **hyper)
+    if sk.meta["backend"] != "jax":
+        raise ValueError(
+            f"run_fleet requires a JAX-backed sketch, got {name!r}: host "
+            "baselines have no multi-stream fleet path — loop run_sketch")
+    fleet = shard_streams(sk, S) if shard else vmap_streams(sk, S)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    data = jnp.asarray(streams_rows, jnp.float32)
+
+    warm = fleet.update_block(fleet.init(), data, ts)   # compile cache
+    jax.block_until_ready(warm)
+
+    state = fleet.init()
+    t0 = time.time()
+    state = fleet.update_block(state, data, ts)
+    jax.block_until_ready(state)
+    wall = time.time() - t0
+    return S * n / max(wall, 1e-9), wall, state, fleet
+
+
 # ---------------------------------------------------------------------------
 # Legacy runners — thin deprecated wrappers kept for import compatibility
 # ---------------------------------------------------------------------------

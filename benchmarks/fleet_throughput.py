@@ -1,0 +1,80 @@
+"""Fleet serving throughput: rows/sec vs fleet size.
+
+Streams S independent per-user row streams through ``shard_streams`` (the
+SPMD fleet path layered on ``vmap_streams``) and reports ingest throughput
+for fleet sizes {64, 256, 1024}, plus the latency of a cross-shard
+``merge_streams`` aggregate query and, for scale, a single-stream
+``run_sketch`` reference.  This is the ROADMAP's serving-scale axis: the
+same numbers on a TPU mesh are the hardware-saturation figure.
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--sizes 64 256]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import run_fleet, run_sketch, write_csv
+
+
+def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
+          n: int = 192, eps: float = 0.25, window: int = 64,
+          seed: int = 0, shard: bool = True) -> List[Dict]:
+    import jax
+
+    from repro.sketch.api import merge_streams
+
+    rng = np.random.default_rng(seed)
+    out: List[Dict] = []
+
+    # single-stream reference through the generic runner (compile + stream)
+    one = rng.normal(size=(n, d)).astype(np.float32)
+    one /= np.linalg.norm(one, axis=1, keepdims=True)
+    _, _, wall_one = run_sketch(name, one, eps=eps, window=window,
+                                query_every=n)
+    print(f"single stream ({name}, n={n}, d={d}): "
+          f"{n / max(wall_one, 1e-9):,.0f} rows/s")
+
+    for S in sizes:
+        streams = rng.normal(size=(S, n, d)).astype(np.float32)
+        streams /= np.linalg.norm(streams, axis=2, keepdims=True)
+        rps, wall, state, fleet = run_fleet(name, streams, eps=eps,
+                                            window=window, shard=shard)
+        t0 = time.time()
+        g = merge_streams(fleet, state, n)
+        jax.block_until_ready(g)
+        agg_s = time.time() - t0
+        print(f"fleet S={S:5d} on {jax.device_count()} device(s): "
+              f"{rps:12,.0f} rows/s   (ingest {wall:.3f}s, "
+              f"aggregate merge {agg_s:.3f}s)")
+        out.append({"fleet_size": S, "devices": jax.device_count(),
+                    "rows_per_sec": round(rps), "ingest_wall_s": wall,
+                    "aggregate_merge_s": agg_s, "rows_per_stream": n,
+                    "d": d, "eps": eps, "window": window, "variant": name})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", type=int, nargs="+", default=[64, 256, 1024])
+    ap.add_argument("--variant", default="dsfd")
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--rows", type=int, default=192)
+    ap.add_argument("--eps", type=float, default=0.25)
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--no-shard", action="store_true",
+                    help="vmap only (single device), no shard_map")
+    args = ap.parse_args()
+    rows = bench(tuple(args.sizes), name=args.variant, d=args.d,
+                 n=args.rows, eps=args.eps, window=args.window,
+                 shard=not args.no_shard)
+    path = write_csv("fleet_throughput.csv", rows)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,4 +79,14 @@ print(f"\nvmap_streams: {S} streams × {n_s} rows in one jitted update_block; "
       f"worst cova-err={worst:.2f} ≤ 4εN={4*eps*N_s:.0f}")
 assert worst <= 4 * eps * N_s
 
+# --- Aggregate analytics: cross-stream merge → ONE global-window sketch ----
+from repro.sketch.api import merge_streams
+
+g = merge_streams(fleet, state, n_s)          # ⌈log₂S⌉ vmapped merge rounds
+union = streams[:, n_s - N_s:].reshape(-1, d)
+g_err = float(cova_error(jnp.asarray(union), jnp.asarray(sk_s.query(g, n_s))))
+print(f"merge_streams: global sketch over all {S} windows; "
+      f"cova-err={g_err:.2f} ≤ S·4εN={S*4*eps*N_s:.0f} (additive bound)")
+assert g_err <= S * 4 * eps * N_s
+
 print("\nall guarantees hold ✓")

@@ -14,6 +14,7 @@ parameter-swept in the benchmarks either way (as the paper does).
 
 from __future__ import annotations
 
+import copy
 from typing import Dict, Tuple
 
 import numpy as np
@@ -57,6 +58,25 @@ class DIFD:
                 dead.append((j, idx))
         for k in dead:
             del self.sketches[k]
+
+    def combine(self, other: "DIFD") -> "DIFD":
+        """Native merge of two DI-FDs that watched *disjoint rows of the
+        same timeline* (the sharded-fleet case): dyadic intervals are
+        timestamp-aligned, so sketches at the same (level, index) FD-merge
+        pairwise.  Mutates and returns ``self``."""
+        if (other.d, other.window, other.J) != (self.d, self.window, self.J):
+            raise ValueError("combine requires identically-configured DIFDs")
+        for key, fd in other.sketches.items():
+            mine = self.sketches.get(key)
+            if mine is None:
+                # deep copy: adopting other's live NpFD by reference would
+                # let later updates to either DIFD mutate the other
+                self.sketches[key] = copy.deepcopy(fd)
+            else:
+                mine.merge(fd)
+        self.t = max(self.t, other.t)
+        self._expire()
+        return self
 
     def query(self) -> np.ndarray:
         """Dyadic suffix decomposition of [t-N+1, t]."""

@@ -82,6 +82,19 @@ class LMFD:
             while lv and lv[-1].end <= horizon:
                 lv.pop()
 
+    def combine(self, other: "LMFD") -> "LMFD":
+        """LM-FD has no sound native merge: block boundaries are sealed by
+        per-instance *energy* quotas, so two histograms over the same
+        timeline chop the stream at different points and their levels do
+        not align (unlike DI-FD's timestamp-aligned dyadic intervals).
+        Concatenating block lists would double-count the straddling-block
+        error budget and break the εN guarantee, so this is an explicit
+        ``NotImplementedError`` — the conformance suite asserts it raises
+        rather than silently passing."""
+        raise NotImplementedError(
+            "LMFD.combine: exponential-histogram blocks are energy-aligned "
+            "per instance; merging two histograms has no error guarantee")
+
     # -- query ---------------------------------------------------------------
     def query(self) -> np.ndarray:
         out = NpFD(self.ell, self.d)

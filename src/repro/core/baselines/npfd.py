@@ -41,7 +41,6 @@ class NpFD:
 
     def merge(self, other: "NpFD") -> None:
         rows = other.rows()
-        self.nbuf_before = self.nbuf
         for r in rows:
             if self.nbuf >= self.buf.shape[0]:
                 self._shrink()

@@ -24,6 +24,7 @@ class SWR:
 
     def __init__(self, d: int, ell: int, window: int, seed: int = 0):
         self.d, self.ell, self.window = d, int(ell), int(window)
+        self.seed = int(seed)
         self.rng = np.random.default_rng(seed)
         # per sampler: deque of (priority, t, row) with decreasing priority
         self.deques: List[Deque[Tuple[float, int, np.ndarray]]] = [
@@ -50,6 +51,39 @@ class SWR:
             while dq and dq[0][1] + self.window <= self.t:
                 dq.popleft()
 
+    def combine(self, other: "SWR") -> "SWR":
+        """Native merge for disjoint rows of a shared timeline: sampler i
+        keeps the max-priority row over the union, which is exactly what a
+        single sketch over the interleaved stream would hold — valid only
+        when the two sides drew their priority keys *independently*, so
+        identically-seeded sketches (whose key streams are byte-identical
+        and hence fully correlated) are rejected.  The merged deque is
+        rebuilt to the monotone invariant.  Mutates and returns ``self``."""
+        if (other.d, other.ell, other.window) != (self.d, self.ell,
+                                                  self.window):
+            raise ValueError("combine requires identically-configured SWRs")
+        if other.seed == self.seed:
+            raise ValueError(
+                "combine requires independently-seeded SWRs: identical "
+                "seeds give correlated priority keys and a biased sample")
+        self.t = max(self.t, other.t)
+        for i, dq_o in enumerate(other.deques):
+            entries = sorted(list(self.deques[i]) + list(dq_o),
+                             key=lambda e: e[1])          # by timestamp
+            dq: Deque[Tuple[float, int, np.ndarray]] = deque()
+            for e in entries:
+                if e[1] + self.window <= self.t:
+                    continue
+                while dq and dq[-1][0] <= e[0]:
+                    dq.pop()
+                dq.append(e)
+            self.deques[i] = dq
+        hist = sorted(list(self.fro_hist) + list(other.fro_hist))
+        self.fro_hist = deque(h for h in hist
+                              if h[0] + self.window > self.t)
+        self.fro_sum = sum(w for _, w in self.fro_hist)
+        return self
+
     def query(self) -> np.ndarray:
         rows = []
         for dq in self.deques:
@@ -71,6 +105,7 @@ class SWOR:
 
     def __init__(self, d: int, ell: int, window: int, seed: int = 0):
         self.d, self.ell, self.window = d, int(ell), int(window)
+        self.seed = int(seed)
         self.rng = np.random.default_rng(seed)
         # candidates: list of (key, t, row, weight), kept iff fewer than ℓ
         # newer candidates have a larger key.
@@ -108,6 +143,29 @@ class SWOR:
                 heapq.heappop(heap)
         kept.reverse()
         self.cands = kept
+
+    def combine(self, other: "SWOR") -> "SWOR":
+        """Native merge for disjoint rows of a shared timeline: the union
+        of the two candidate skylines, re-pruned, is the skyline a single
+        sketch over the interleaved stream would keep — valid only when the
+        Efraimidis–Spirakis keys were drawn independently per side, so
+        identically-seeded sketches are rejected (correlated keys bias the
+        top-ℓ).  Mutates and returns ``self``."""
+        if (other.d, other.ell, other.window) != (self.d, self.ell,
+                                                  self.window):
+            raise ValueError("combine requires identically-configured SWORs")
+        if other.seed == self.seed:
+            raise ValueError(
+                "combine requires independently-seeded SWORs: identical "
+                "seeds give correlated priority keys and a biased sample")
+        self.t = max(self.t, other.t)
+        self.cands.extend(other.cands)
+        hist = sorted(list(self.fro_hist) + list(other.fro_hist))
+        self.fro_hist = deque(h for h in hist
+                              if h[0] + self.window > self.t)
+        self.fro_sum = sum(w for _, w in self.fro_hist)
+        self._prune()
+        return self
 
     def query(self) -> np.ndarray:
         self._prune()

@@ -39,7 +39,8 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fd import fd_rotate, fd_shrink, fd_compress
+from repro.core.fd import (fd_absorb, fd_compress, fd_init, fd_rotate,
+                           fd_shrink)
 
 _NEG = jnp.int32(-(2**30))
 
@@ -368,6 +369,46 @@ def dsfd_query_rows(cfg: DSFDConfig, state: DSFDState,
 
 def dsfd_query(cfg: DSFDConfig, state: DSFDState) -> jax.Array:
     return fd_compress(dsfd_query_rows(cfg, state), cfg.ell)
+
+
+def dsfd_merge(cfg: DSFDConfig, s1: DSFDState, s2: DSFDState,
+               now=None) -> DSFDState:
+    """Merge two DS-FD sketches into one (FD mergeability, Liberty 2013).
+
+    The live rows of each side — snapshots ∪ residual, i.e. exactly
+    ``dsfd_query_rows`` — are unioned and FD-re-compressed to 2ℓ rows via
+    ``fd_absorb``, giving the additive covariance-error bound
+
+        err(merged) ≤ err(s1) + err(s2) + ‖B₁;B₂‖_F²/ℓ .
+
+    The merged state is a valid ``DSFDState`` (it keeps answering queries
+    and absorbing rows), but its snapshot rings restart empty, so rows
+    already folded into the residual can no longer expire individually —
+    merge is the *aggregation* primitive (cross-shard / cross-user fleet
+    queries), not a substitute for streaming both inputs into one sketch.
+    ``now`` re-applies expiry to both sides before the union (pass the
+    query time for time-based streams).
+    """
+    rows = jnp.concatenate([dsfd_query_rows(cfg, s1, now=now),
+                            dsfd_query_rows(cfg, s2, now=now)], axis=0)
+    fd = fd_absorb(fd_init(cfg.ell, cfg.d), rows, ell=cfg.ell)
+    m1, m2 = s1.main, s2.main
+    merged = _sketch_init(cfg, jnp.minimum(m1.start_t, m2.start_t))
+    merged = merged._replace(
+        buf=fd.buf,
+        nbuf=fd.nbuf,
+        # Frobenius mass is a safe σ₁² upper bound for the trigger logic.
+        sig1=jnp.sum(fd.buf * fd.buf),
+        energy=m1.energy + m2.energy,
+        last_t=jnp.maximum(m1.last_t, m2.last_t),
+        # coverage is the INTERSECTION of the two sides: the union of rows
+        # represents [t, now] only where both inputs do (max, not min —
+        # min would let Algorithm 7 select a merged layer that is missing
+        # one side's already-evicted early-window rows).
+        cov_start=jnp.maximum(m1.cov_start, m2.cov_start),
+    )
+    t_next = jnp.maximum(m1.last_t, m2.last_t) + 1
+    return DSFDState(main=merged, aux=_sketch_init(cfg, t_next))
 
 
 # ---------------------------------------------------------------------------

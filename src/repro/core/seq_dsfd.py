@@ -18,8 +18,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsfd import (DSFDConfig, DSFDState, dsfd_init, dsfd_update,
-                             dsfd_query_rows)
+from repro.core.dsfd import (DSFDConfig, DSFDState, dsfd_init, dsfd_merge,
+                             dsfd_query_rows, dsfd_update)
 from repro.core.fd import fd_compress
 
 
@@ -101,6 +101,18 @@ def layered_query_rows(cfg: LayeredConfig, state, now) -> jax.Array:
 
 def layered_query(cfg: LayeredConfig, state, now) -> jax.Array:
     return fd_compress(layered_query_rows(cfg, state, now), cfg.base.ell)
+
+
+def layered_merge(cfg: LayeredConfig, s1, s2, now=None):
+    """Merge two layered (Seq-/Time-DS-FD) states layer-by-layer.
+
+    Layer j of both inputs runs the same threshold θⱼ, so the DS-FD merge
+    (snapshot ∪ residual union, re-compressed to 2ℓ) applies per layer and
+    the Algorithm 7 layer selection still works on the merged stack — the
+    merged ``cov_start`` per layer is the max (intersection) of the two
+    sides, so a layer only claims to cover the window when both inputs do.
+    """
+    return jax.vmap(lambda a, b: dsfd_merge(cfg.base, a, b, now))(s1, s2)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "query_every"))

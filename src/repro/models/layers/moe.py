@@ -24,19 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:
-    from jax import shard_map
-except ImportError:  # jax < 0.6: experimental API, `check_vma` was `check_rep`
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
-        if check_vma is not None:
-            kw["check_rep"] = check_vma
-        return _shard_map(f, mesh=mesh, in_specs=in_specs,
-                          out_specs=out_specs, **kw)
-
 from repro.configs.base import MoECfg
-from repro.parallel.sharding import current_mesh, current_rules
+from repro.parallel.sharding import (current_mesh, current_rules,
+                                     shard_map_compat as shard_map)
 
 
 @dataclasses.dataclass(frozen=True)

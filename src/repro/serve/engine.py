@@ -1,12 +1,19 @@
-"""Batched serving engine: fixed-slot continuous batching over the jit'd
-prefill/decode steps.
+"""Batched serving engines.
 
-B slots run in lockstep (one decode_step per tick advances every active
-slot); finished or empty slots are refilled by prefilling the next queued
-request and splicing its caches into the batch at the slot index.  This is
-the vLLM-style "continuous batching lite" that a fixed-shape jit world
-supports: no recompilation at runtime — prefill is compiled per bucketed
-prompt length, decode once.
+Two serving paths live here:
+
+* ``ServeEngine`` — fixed-slot continuous batching over the jit'd
+  prefill/decode steps.  B slots run in lockstep (one decode_step per tick
+  advances every active slot); finished or empty slots are refilled by
+  prefilling the next queued request and splicing its caches into the batch
+  at the slot index.  This is the vLLM-style "continuous batching lite"
+  that a fixed-shape jit world supports: no recompilation at runtime —
+  prefill is compiled per bucketed prompt length, decode once.
+
+* ``SketchFleetEngine`` — the fleet-backed sketch serving path: S per-user
+  sliding-window sketches advanced as ONE SPMD program
+  (``shard_streams``), with per-user queries and cross-shard ``merge``
+  aggregation for global-window queries.
 """
 
 from __future__ import annotations
@@ -122,6 +129,83 @@ class ServeEngine:
                 and self.ticks < max_ticks:
             self.step()
         return self.done
+
+
+class SketchFleetEngine:
+    """Fleet-backed sketch serving: S per-user sketches, one SPMD program.
+
+    Ingestion is tick-batched to keep shapes static: ``submit(user, row)``
+    buffers rows per user; each ``step()`` assembles a fixed ``(S, block,
+    d)`` slab — users with nothing queued contribute zero rows, which the
+    DS-FD family treats as idle ticks (expiry/swap advance, nothing is
+    absorbed) — and advances every stream with one sharded
+    ``update_block``.  The fleet runs one shared clock, so an idle user's
+    window ages out in engine ticks, exactly the time-based semantics of
+    §5.
+
+    Queries:
+      * ``query_user(u)``  — that user's compressed (2ℓ, d) window sketch.
+      * ``query_global()`` — cross-shard ``merge_streams`` tree-reduction
+        to a single global-window sketch over every user's live window
+        (the aggregate-analytics path).
+    """
+
+    def __init__(self, name: str = "dsfd", *, d: int, streams: int,
+                 eps: float = 1 / 8, window: int = 1024, block: int = 8,
+                 mesh=None, **hyper):
+        from repro.sketch.api import make_sketch, shard_streams
+
+        self.base = make_sketch(name, d=d, eps=eps, window=window, **hyper)
+        self.fleet = shard_streams(self.base, streams, mesh)
+        self.S, self.d, self.block = int(streams), int(d), int(block)
+        self.state = self.fleet.init()
+        self.t = 0                                  # fleet clock (ticks)
+        self.rows_ingested = 0
+        self._pending: List[deque] = [deque() for _ in range(self.S)]
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, user: int, row: np.ndarray) -> None:
+        self._pending[user].append(np.asarray(row, np.float32))
+
+    @property
+    def backlog(self) -> int:
+        return sum(len(q) for q in self._pending)
+
+    # -- main loop ---------------------------------------------------------
+
+    def step(self) -> None:
+        """One engine tick: drain ≤ ``block`` rows per user, advance the
+        whole fleet in one sharded program call."""
+        slab = np.zeros((self.S, self.block, self.d), np.float32)
+        for u, q in enumerate(self._pending):
+            for b in range(min(self.block, len(q))):
+                slab[u, b] = q.popleft()
+                self.rows_ingested += 1
+        ts = jnp.arange(self.t + 1, self.t + self.block + 1, dtype=jnp.int32)
+        self.state = self.fleet.update_block(self.state, jnp.asarray(slab),
+                                             ts)
+        self.t += self.block
+
+    def run(self, max_ticks: int = 10_000) -> int:
+        """Drain every pending row; returns engine ticks consumed."""
+        ticks = 0
+        while self.backlog and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks
+
+    # -- queries -----------------------------------------------------------
+
+    def query_user(self, user: int) -> np.ndarray:
+        one = jax.tree.map(lambda x: x[user], self.state)
+        return np.asarray(self.base.query(one, self.t))
+
+    def query_global(self) -> np.ndarray:
+        from repro.sketch.api import merge_streams
+
+        g = merge_streams(self.fleet, self.state, self.t)
+        return np.asarray(self.base.query(g, self.t))
 
 
 def _splice_caches(cfg: ModelConfig, big, one, slot: int, s_max: int):

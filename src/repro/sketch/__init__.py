@@ -2,7 +2,9 @@
 
 * ``api``      — the unified ``SlidingSketch`` protocol + registry: every
   sketch variant (DS-FD family and baselines) behind one
-  init/update/update_block/query_rows/query/space contract.
+  init/update/update_block/query_rows/query/space/merge contract, with
+  ``vmap_streams`` / ``shard_streams`` / ``merge_streams`` for fleet-scale
+  serving.
 * ``monitor``  — SlidingGradSketch: windowed streaming PCA of gradients.
 * ``compress`` — FD low-rank gradient compression with error feedback for
   the cross-pod all-reduce.
@@ -11,7 +13,8 @@
 """
 
 from repro.sketch.api import SlidingSketch, available_sketches, \
-    make_sketch, register, vmap_streams                         # noqa: F401
+    make_sketch, merge_streams, register, shard_streams, \
+    vmap_streams                                                # noqa: F401
 from repro.sketch.monitor import SketchConfig, sketch_init, sketch_update, \
     sketch_query, subspace_drift                                # noqa: F401
 from repro.sketch.compress import CompressConfig, compress_grads, \

@@ -24,6 +24,17 @@ protocol method    paper mapping
                    Algorithm 4's return / Algorithm 7 line 3
 ``space(s)``       live stored-row count — the quantity plotted in the
                    paper's space figures (Figures 4-9, Theorems 3.2/4.1/5.1)
+``merge(s1,s2)``   combine two sketches of the same variant into one whose
+                   query covers both inputs (FD mergeability, Liberty 2013:
+                   the live snapshot/residual rows are unioned and
+                   re-compressed to 2ℓ via ``fd_absorb``, giving the
+                   additive bound err ≤ err₁ + err₂ + ‖B₁;B₂‖_F²/ℓ).  Takes
+                   an optional query time ``t`` to re-apply expiry first.
+                   Host baselines use their native combine where one exists
+                   (DI-FD: aligned dyadic intervals; SWR/SWOR: priority-key
+                   union, requiring independently-*seeded* instances) and
+                   raise a documented ``NotImplementedError`` otherwise
+                   (LM-FD: energy-aligned blocks do not merge).
 =================  =========================================================
 
 JAX-backed variants (``"fd"``, ``"dsfd"``, ``"seq-dsfd"``, ``"time-dsfd"``)
@@ -33,7 +44,17 @@ independent streams updated in one fused XLA program (the serving-scale
 path).  The numpy baselines (``"lmfd"``, ``"difd"``, ``"swr"``, ``"swor"``)
 satisfy the same protocol through a host-side adapter whose "state" is the
 mutable python object itself (returned back from ``update`` so call sites
-are written identically).
+are written identically; host ``merge`` may likewise mutate and return its
+first argument).
+
+Fleet scale: ``vmap_streams(sk, S)`` fuses S independent per-user streams
+into one XLA program on one device; ``shard_streams(sk, S, mesh)`` lays the
+same fleet out over every device of a mesh via ``shard_map`` (S must divide
+by the device count), so S × n_devices-scale fleets update as one SPMD
+program with zero cross-device traffic on the hot path.  Aggregate queries
+come from ``merge_streams(fleet, state, t)``, which tree-reduces the fleet
+with vmapped pairwise ``merge`` calls (⌈log₂S⌉ rounds) down to a single
+global-window sketch of the base variant — the cross-shard merge path.
 
 Registry::
 
@@ -55,21 +76,21 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.dsfd import (dsfd_init, dsfd_query_rows, dsfd_update,
-                             make_config)
-from repro.core.fd import fd_compress, fd_init, fd_update
-from repro.core.seq_dsfd import (layered_init, layered_query_rows,
-                                 layered_update, make_seq_config,
-                                 make_time_config)
+from repro.core.dsfd import (dsfd_init, dsfd_merge, dsfd_query_rows,
+                             dsfd_update, make_config)
+from repro.core.fd import fd_compress, fd_init, fd_merge, fd_update
+from repro.core.seq_dsfd import (layered_init, layered_merge,
+                                 layered_query_rows, layered_update,
+                                 make_seq_config, make_time_config)
 
 
 class SlidingSketch(NamedTuple):
     """Bundle of pure functions implementing the sliding-sketch protocol.
 
-    Fields ``init / update / update_block / query_rows / query / space`` are
-    the protocol (see module docstring); ``meta`` carries static facts about
-    the instance (``d``, ``eps``, ``window``, ``ell``, ``backend``:
-    ``"jax"`` | ``"host"``) for harnesses that need them.
+    Fields ``init / update / update_block / query_rows / query / space /
+    merge`` are the protocol (see module docstring); ``meta`` carries static
+    facts about the instance (``d``, ``eps``, ``window``, ``ell``,
+    ``backend``: ``"jax"`` | ``"host"``) for harnesses that need them.
     """
 
     name: str
@@ -80,6 +101,7 @@ class SlidingSketch(NamedTuple):
     query_rows: Callable[..., Any]
     query: Callable[..., Any]
     space: Callable[[Any], Any]
+    merge: Callable[..., Any]
 
 
 _REGISTRY: Dict[str, Callable[..., SlidingSketch]] = {}
@@ -163,6 +185,10 @@ def _make_fd(d: int, eps: float, window: int, **_) -> SlidingSketch:
     def space(state):
         return state.nbuf
 
+    def merge(s1, s2, t=None):
+        del t                   # no expiry — whole-stream semantics
+        return fd_merge(s1, s2, ell=ell)
+
     return SlidingSketch(
         name="fd",
         meta={"d": d, "eps": eps, "window": window, "ell": ell,
@@ -173,6 +199,7 @@ def _make_fd(d: int, eps: float, window: int, **_) -> SlidingSketch:
         query_rows=query_rows,
         query=query_rows,       # the FD buffer is already the 2ℓ×d sketch
         space=space,
+        merge=merge,
     )
 
 
@@ -207,6 +234,7 @@ def _make_dsfd(d: int, eps: float, window: int, *, mode: str = "fast",
         query_rows=query_rows,
         query=query,
         space=space,
+        merge=lambda s1, s2, t=None: dsfd_merge(cfg, s1, s2, now=t),
     )
 
 
@@ -238,6 +266,7 @@ def _make_layered(name: str, cfg, d, eps, window) -> SlidingSketch:
         query_rows=query_rows,
         query=query,
         space=space,
+        merge=lambda s1, s2, t=None: layered_merge(cfg, s1, s2, now=t),
     )
 
 
@@ -292,6 +321,12 @@ def _host_sketch(name: str, ctor: Callable[[], Any],
     def space(state):
         return state.n_rows_stored
 
+    def merge(s1, s2, t=None):
+        """Native baseline combine (DI-FD / SWR / SWOR); LM-FD raises a
+        documented ``NotImplementedError``.  Mutates and returns ``s1``."""
+        del t                       # host baselines track time internally
+        return s1.combine(s2)
+
     return SlidingSketch(
         name=name,
         meta=dict(meta, backend="host"),
@@ -301,6 +336,7 @@ def _host_sketch(name: str, ctor: Callable[[], Any],
         query_rows=query_rows,
         query=query_rows,           # baseline queries are already compressed
         space=space,
+        merge=merge,
     )
 
 
@@ -402,13 +438,115 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
     def query(state, t=None):
         return jax.vmap(lambda s: sk.query(s, t))(state)
 
+    def merge(s1, s2, t=None):
+        return jax.vmap(lambda a, b: sk.merge(a, b, t))(s1, s2)
+
     return SlidingSketch(
         name=f"vmap[{sk.name}x{S}]",
-        meta=dict(sk.meta, streams=S),
+        meta=dict(sk.meta, streams=S, base=sk),
         init=init,
         update=update,
         update_block=update_block,
         query_rows=query_rows,
         query=query,
         space=jax.vmap(sk.space),
+        merge=merge,
+    )
+
+
+def merge_streams(fleet: SlidingSketch, state, t=None):
+    """Cross-stream merge: reduce a fleet state to ONE global-window sketch.
+
+    ``fleet`` must come from ``vmap_streams`` / ``shard_streams``; the
+    returned state belongs to the *base* variant (``fleet.meta["base"]``)
+    and answers aggregate queries over the union of every stream's window.
+    The reduction is a binary tree of vmapped pairwise ``merge`` calls —
+    ⌈log₂S⌉ rounds, each one XLA program over half the surviving streams —
+    so a million-stream fleet needs 20 rounds, not a million sequential
+    merges.  Under a sharded fleet the tree's upper rounds cross shard
+    boundaries; jit inserts the collectives automatically.
+    """
+    base = fleet.meta.get("base")
+    if base is None:
+        raise ValueError(
+            f"merge_streams needs a fleet from vmap_streams/shard_streams, "
+            f"got {fleet.name!r}")
+    n = int(fleet.meta["streams"])
+    vmerge = jax.vmap(lambda a, b: base.merge(a, b, t))
+    while n > 1:
+        half = n // 2
+        a = jax.tree.map(lambda x: x[:half], state)
+        b = jax.tree.map(lambda x: x[half:2 * half], state)
+        merged = vmerge(a, b)
+        if n % 2:                   # odd stream count: carry the last one
+            tail = jax.tree.map(lambda x: x[2 * half:n], state)
+            state = jax.tree.map(
+                lambda m, z: jnp.concatenate([m, z], axis=0), merged, tail)
+            n = half + 1
+        else:
+            state, n = merged, half
+    return jax.tree.map(lambda x: x[0], state)
+
+
+def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
+                  axis: str = "streams") -> SlidingSketch:
+    """Lift a JAX-backed sketch to a device-sharded fleet of ``streams``.
+
+    Built on :func:`vmap_streams`: every device of ``mesh`` (default: a 1-D
+    mesh over all local devices) owns ``streams / n_devices`` per-user
+    sketches and runs the same vmapped block scan on them — one
+    ``shard_map``'d SPMD program per ``update_block``, no cross-device
+    traffic on the update path (streams are independent).  State leaves are
+    sharded along their leading ``(S, ...)`` stream axis; ``init`` returns
+    the state already placed.  Aggregate (cross-shard) queries go through
+    :func:`merge_streams`, whose upper tree-reduction rounds are where the
+    collective traffic lives.
+
+    ``streams`` must be a multiple of the mesh axis size.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map_compat
+
+    if sk.meta.get("backend") != "jax":
+        raise ValueError(
+            f"shard_streams requires a JAX-backed sketch, got {sk.name!r} "
+            f"(backend={sk.meta.get('backend')!r})")
+    if mesh is None:
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((jax.device_count(),), (axis,))
+    ndev = int(mesh.shape[axis])
+    S = int(streams)
+    if S % ndev:
+        raise ValueError(f"streams={S} must divide over {ndev} devices")
+
+    fleet = vmap_streams(sk, S)                 # global-shape semantics
+    local = vmap_streams(sk, S // ndev)         # per-device program
+    spec = P(axis)
+    sharding = NamedSharding(mesh, spec)
+
+    def init(t0=1):
+        return jax.device_put(fleet.init(t0), sharding)
+
+    shard_block = jax.jit(shard_map_compat(
+        local.update_block, mesh=mesh,
+        in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False))
+
+    def update_block(state, rows, ts):
+        ts = jnp.asarray(ts, jnp.int32)
+        if ts.ndim == 1:
+            ts = jnp.broadcast_to(ts, (S, ts.shape[0]))
+        return shard_block(state, rows, ts)
+
+    return SlidingSketch(
+        name=f"shard[{sk.name}x{S}/{ndev}]",
+        meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev),
+        init=init,
+        update=fleet.update,
+        update_block=update_block,
+        query_rows=fleet.query_rows,
+        query=fleet.query,
+        space=fleet.space,
+        merge=fleet.merge,
     )

@@ -1,0 +1,64 @@
+"""Smoke tests pinning the deprecated ``run_dsfd / run_layered /
+run_baseline`` wrappers in ``benchmarks/common.py`` (the PR-1 compat
+surface): they must keep routing through ``run_sketch`` / the host loop
+with the documented return contract ``(queries, peak_rows, wall_s)`` and
+row-index query keys, so external callers of the old names can't silently
+rot.
+"""
+
+import numpy as np
+
+from benchmarks.common import (WindowOracle, eval_queries, run_baseline,
+                               run_dsfd, run_layered, run_sketch)
+
+N, D, WIN, Q = 120, 8, 40, 30
+
+
+def _rows(seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(N, D)).astype(np.float32)
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    return A * scale
+
+
+def _check_contract(queries, peak, wall):
+    assert set(queries) == {Q, 2 * Q, 3 * Q, 4 * Q}   # 1-based row keys
+    for B in queries.values():
+        B = np.asarray(B)
+        assert B.ndim == 2 and B.shape[1] == D and B.dtype == np.float32
+    assert int(peak) > 0 and wall >= 0.0
+
+
+def test_run_dsfd_wrapper_matches_run_sketch():
+    A = _rows()
+    got = run_dsfd(A, 0.25, WIN, mode="fast", query_every=Q)
+    _check_contract(*got)
+    want, peak, _ = run_sketch("dsfd", A, eps=0.25, window=WIN,
+                               query_every=Q, mode="fast")
+    assert int(got[1]) == int(peak)
+    for t in want:
+        np.testing.assert_allclose(got[0][t], want[t], atol=1e-6)
+
+
+def test_run_layered_wrapper_seq_and_time():
+    A = _rows(seed=1, scale=1.0)
+    for time_based in (False, True):
+        queries, peak, wall = run_layered(A, 0.25, WIN, 4.0,
+                                          time_based=time_based,
+                                          query_every=Q)
+        _check_contract(queries, peak, wall)
+        oracle = WindowOracle(A.astype(np.float64), WIN)
+        avg, mx = eval_queries(oracle, queries, min_t=WIN)
+        assert mx <= 4.0 * 0.25         # rel err ≤ βε (Thm 4.1 / Cor 5.1)
+
+
+def test_run_baseline_wrapper_host_loop():
+    from repro.core.baselines import LMFD
+
+    A = _rows(seed=2)
+    alg = LMFD(D, 0.25, WIN)
+    queries, peak, wall = run_baseline(alg, A, query_every=Q)
+    _check_contract(queries, peak, wall)
+    # the wrapper drove the *same* object the caller constructed
+    assert alg.t == N
+    assert peak >= alg.n_rows_stored > 0

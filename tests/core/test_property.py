@@ -10,6 +10,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dsfd import (dsfd_run_stream, make_config)
@@ -114,6 +115,71 @@ def test_fd_mergeable(A, B_mat, ell):
     both = np.vstack([A, B_mat])
     err = _spec_err(both, np.asarray(sk))
     assert err <= float(np.sum(both * both)) / ell * (1 + 1e-3)
+
+
+def _check_merge_additive(A, B_mat, eps, R):
+    """Additive mergeability at the protocol level (the tentpole bound):
+
+        err(merge(s1, s2)) ≤ err(s1) + err(s2) + ‖B₁;B₂‖_F²/ℓ
+
+    s1 ← stream A, s2 ← stream B (arbitrary split of one logical stream),
+    rows rescaled to ‖a‖² ∈ [1, R], no expiry (window ≥ both streams) so
+    the exact union covariance is computable."""
+    import pytest
+
+    from repro.sketch.api import make_sketch
+
+    d = min(A.shape[1], B_mat.shape[1])
+    if d < 2:
+        pytest.skip("degenerate width")
+    A, B_mat = A[:, :d], B_mat[:, :d]
+
+    def rescale(M, lo_hi_seed):
+        rng = np.random.default_rng(lo_hi_seed)
+        M = M / np.maximum(np.linalg.norm(M, axis=1, keepdims=True), 1e-9)
+        return (M * np.sqrt(rng.uniform(1.0, R, size=(len(M), 1)))
+                ).astype(np.float32)
+
+    A, B_mat = rescale(A, 0), rescale(B_mat, 1)
+    n1, n2 = len(A), len(B_mat)
+    window = 4 * (n1 + n2)                      # no expiry
+    sk = make_sketch("dsfd", d=d, eps=eps, window=window)
+    ell = sk.meta["ell"]
+
+    s1 = sk.update_block(sk.init(), jnp.asarray(A),
+                         np.arange(1, n1 + 1, dtype=np.int32))
+    s2 = sk.update_block(sk.init(), jnp.asarray(B_mat),
+                         np.arange(n1 + 1, n1 + n2 + 1, dtype=np.int32))
+    q1 = np.asarray(sk.query_rows(s1, n1 + n2), np.float64)
+    q2 = np.asarray(sk.query_rows(s2, n1 + n2), np.float64)
+    merged = sk.merge(s1, s2, n1 + n2)
+    q = np.asarray(sk.query(merged, n1 + n2))
+
+    union = np.vstack([A, B_mat])
+    budget = (_spec_err(A, q1) + _spec_err(B_mat, q2)
+              + (np.sum(q1 * q1) + np.sum(q2 * q2)) / ell)
+    err = _spec_err(union, q)
+    assert err <= budget * (1 + 1e-3) + 1e-6, (err, budget)
+
+
+@settings(max_examples=8, deadline=None)
+@given(_matrix(max_n=120), _matrix(max_n=120), st.sampled_from([0.25, 0.5]),
+       st.sampled_from([1.0, 4.0, 16.0]))
+def test_merge_additive_bound(A, B_mat, eps, R):
+    """Hypothesis sweep: arbitrary split points + row scales in [1, R]."""
+    _check_merge_additive(A, B_mat, eps, R)
+
+
+@pytest.mark.parametrize("seed,eps,R", [(0, 0.25, 1.0), (1, 0.25, 16.0),
+                                        (2, 0.5, 4.0), (3, 0.125, 16.0)])
+def test_merge_additive_bound_fixed_seeds(seed, eps, R):
+    """Deterministic fallback for containers without hypothesis — the same
+    additive-bound check on pinned draws (split point varies with seed)."""
+    rng = np.random.default_rng(seed)
+    n, d = int(rng.integers(40, 160)), int(rng.integers(3, 12))
+    k = int(rng.integers(8, n - 8))            # arbitrary split point
+    M = rng.normal(size=(n, d)).astype(np.float32)
+    _check_merge_additive(M[:k], M[k:], eps, R)
 
 
 @settings(max_examples=8, deadline=None)

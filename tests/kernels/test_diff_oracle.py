@@ -1,0 +1,105 @@
+"""Differential-oracle suite: every Pallas kernel vs its ``ref.py`` in
+interpret mode, concentrating on the shapes the per-kernel sweeps in
+``test_kernels.py`` leave out — *unaligned/padded* dims (m not a multiple
+of the 8-row sublane, d not a multiple of the 128 lane width) where the
+wrappers' zero-padding must be exact — plus f32 tolerance sweeps across
+input scales (padding or accumulation bugs show up as scale-dependent
+error, not just large error).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attn.ops import flash_attention
+from repro.kernels.flash_attn.ref import flash_ref
+from repro.kernels.gram.ops import gram
+from repro.kernels.gram.ref import gram_ref
+from repro.kernels.power_iter.ops import power_iter
+from repro.kernels.power_iter.ref import power_iter_ref
+from repro.kernels.rank1_downdate.ops import rank1_downdate
+from repro.kernels.rank1_downdate.ref import rank1_downdate_ref
+from repro.kernels.window_gram.ops import window_gram
+from repro.kernels.window_gram.ref import window_gram_ref
+
+# deliberately hostile shapes: m ∉ 8ℤ, d ∉ 128ℤ, both prime-ish and tiny
+UNALIGNED_MD = [(1, 1), (3, 5), (7, 130), (9, 127), (13, 257), (31, 333)]
+SCALES = [1e-3, 1.0, 1e3]                     # f32 tolerance sweep
+
+
+def _f32_tol(scale):
+    # relative tolerance is scale-free; atol scales with the data's energy
+    return dict(rtol=2e-4, atol=2e-4 * scale * scale)
+
+
+@pytest.mark.parametrize("m,d", UNALIGNED_MD)
+@pytest.mark.parametrize("scale", SCALES)
+def test_gram_oracle_unaligned(m, d, scale):
+    rng = np.random.default_rng(m * d + 1)
+    x = jnp.asarray(scale * rng.normal(size=(m, d)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(gram(x, interpret=True)),
+                               np.asarray(gram_ref(x)), **_f32_tol(scale))
+
+
+@pytest.mark.parametrize("m", [1, 3, 7, 9, 13, 31])
+def test_power_iter_oracle_unaligned(m):
+    rng = np.random.default_rng(m)
+    A = rng.normal(size=(m, 2 * m + 1)).astype(np.float32)
+    K = jnp.asarray(A @ A.T)
+    lam, u = power_iter(K, iters=64, interpret=True)
+    lam_r, u_r = power_iter_ref(K, iters=64)
+    np.testing.assert_allclose(float(lam), float(lam_r), rtol=1e-4)
+    np.testing.assert_allclose(np.abs(np.asarray(u)),
+                               np.abs(np.asarray(u_r)), atol=1e-3)
+
+
+@pytest.mark.parametrize("m,d", UNALIGNED_MD)
+@pytest.mark.parametrize("scale", SCALES)
+def test_rank1_downdate_oracle_unaligned(m, d, scale):
+    rng = np.random.default_rng(m + d)
+    D = jnp.asarray(scale * rng.normal(size=(m, d)), jnp.float32)
+    v = rng.normal(size=(d,))
+    v = jnp.asarray(v / np.linalg.norm(v), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rank1_downdate(D, v, interpret=True)),
+        np.asarray(rank1_downdate_ref(D, v)), **_f32_tol(scale))
+
+
+@pytest.mark.parametrize("n,d", [(1, 1), (7, 3), (9, 130), (127, 64),
+                                 (129, 127), (250, 31)])
+@pytest.mark.parametrize("scale", SCALES)
+def test_window_gram_oracle_unaligned(n, d, scale):
+    rng = np.random.default_rng(n + d)
+    A = jnp.asarray(scale * rng.normal(size=(n, d)), jnp.float32)
+    got = np.asarray(window_gram(A, interpret=True))
+    want = np.asarray(window_gram_ref(A))
+    np.testing.assert_allclose(got, want, rtol=2e-4,
+                               atol=2e-4 * scale * scale * n)
+
+
+@pytest.mark.parametrize("BH,BHkv,S,dh,causal", [
+    (2, 1, 128, 64, True),                    # GQA group of 2
+    (4, 4, 128, 32, False),                   # MHA, small head dim
+    (3, 1, 256, 64, True),                    # odd head count
+])
+def test_flash_attn_oracle(BH, BHkv, S, dh, causal):
+    ks = jax.random.split(jax.random.PRNGKey(BH * S), 3)
+    q = jax.random.normal(ks[0], (BH, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (BHkv, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (BHkv, S, dh), jnp.float32)
+    o = flash_attention(q, k, v, causal, 64, 64)
+    o_ref, _ = flash_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gram_psd_and_symmetry_invariants():
+    """Structural invariants the oracle itself must satisfy — catches a
+    broken ref.py as well as a broken kernel (true differential testing)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(13, 257)), jnp.float32)
+    for K in (gram(x, interpret=True), gram_ref(x)):
+        Kn = np.asarray(K, np.float64)
+        np.testing.assert_allclose(Kn, Kn.T, atol=1e-5)
+        assert np.linalg.eigvalsh(Kn).min() >= -1e-3

@@ -1,0 +1,254 @@
+"""Registry-wide conformance suite: every registered sketch variant ×
+every protocol method (``init / update / update_block / query_rows /
+query / space / merge``) on one shared synthetic stream.
+
+Checks per variant:
+  * state/query shapes and dtypes survive every protocol method,
+  * ``space(s)`` never exceeds the variant's stated bound (the ROADMAP
+    space-bound table, instantiated with this stream's constants),
+  * ``update_block`` ≡ repeated ``update``,
+  * window covariance error ≤ the per-variant bound,
+  * ``merge`` obeys the additive FD bound (deterministic variants), is
+    structurally sound (samplers), or raises a documented
+    ``NotImplementedError`` (LM-FD) — never a silent pass.
+"""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch.api import available_sketches, make_sketch
+
+N_ROWS, D, WINDOW, EPS = 360, 16, 120, 1 / 8
+CHUNK = 30                                   # space sampled per chunk
+
+NAMES = sorted(available_sketches())
+HYPER = {"seq-dsfd": {"R": 1.0}, "time-dsfd": {"R": 1.0}}
+
+# relative covariance-error ceiling, ‖A_WᵀA_W − BᵀB‖₂ / ‖A_W‖_F²
+# (DS-FD family: Theorems 3.1/4.1/5.1 give 4ε; FD: ε whole-stream;
+# LM-FD: window-straddling block, generous constant; samplers:
+# concentration at ℓ = 4/ε² samples, deterministic via seed=0)
+BOUNDS = {
+    "fd": 1.0 * EPS + 1e-3,
+    "dsfd": 4.0 * EPS,
+    "seq-dsfd": 4.0 * EPS,
+    "time-dsfd": 4.0 * EPS,
+    "lmfd": 6.0 * EPS,
+    "difd": 4.0 * EPS,
+    "swr": 4.0 * EPS,
+    "swor": 4.0 * EPS,
+}
+
+
+def _stream(n=N_ROWS, d=D, seed=0):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    A[:, :3] *= 3.0
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    return A
+
+
+def _rel_err(AW, B):
+    B = np.asarray(B, np.float64)
+    M = AW.T.astype(np.float64) @ AW - B.T @ B
+    return float(np.linalg.norm(M, 2) / np.sum(AW * AW))
+
+
+def _spec_err2(rows_w, B):
+    """Absolute spectral error ‖A_WᵀA_W − BᵀB‖₂."""
+    B = np.asarray(B, np.float64)
+    M = rows_w.T.astype(np.float64) @ rows_w - B.T @ B
+    return float(np.linalg.norm(M, 2))
+
+
+def _make(name):
+    return make_sketch(name, d=D, eps=EPS, window=WINDOW,
+                       **HYPER.get(name, {}))
+
+
+def _space_bound(sk, state0):
+    """The variant's stated live-row ceiling (ROADMAP table constants)."""
+    name, ell = sk.name, sk.meta["ell"]
+    if name == "fd":
+        return 2 * ell
+    if name == "dsfd":
+        cfg = sk.meta["cfg"]
+        return 2 * (cfg.cap + cfg.m)                      # main + aux
+    if name in ("seq-dsfd", "time-dsfd"):
+        cfg = sk.meta["cfg"]
+        return cfg.levels * 2 * (cfg.base.cap + cfg.base.m)
+    if name == "lmfd":
+        # ≤ b+1 blocks × ≤ 2ℓ rows per live level + the open block;
+        # levels ≤ log2(total stream energy / level-0 quota) + 2
+        lm = state0
+        levels = int(math.log2(max(N_ROWS / lm.q0, 2.0))) + 2
+        return (lm.b + 1) * 2 * ell * levels + 2 * ell
+    if name == "difd":
+        di = state0
+        return sum(2 * min(lj, D) * (WINDOW // Lj + 2)
+                   for lj, Lj in zip(di.ell_j, di.len_j))
+    if name == "swr":
+        # ℓ monotone deques of expected O(log N) entries each
+        return ell * (4 * int(math.log2(WINDOW)) + 8)
+    if name == "swor":
+        return 8 * ell + 64 + 64                          # skyline + prune lag
+    raise AssertionError(f"no stated bound for {name}")
+
+
+def _feed_chunked(sk, A, ts):
+    """Feed in CHUNK-row blocks, recording space after every block."""
+    rows = jnp.asarray(A) if sk.meta["backend"] == "jax" else A
+    tsx = jnp.asarray(ts) if sk.meta["backend"] == "jax" else ts
+    state, spaces = sk.init(), []
+    for lo in range(0, len(A), CHUNK):
+        state = sk.update_block(state, rows[lo:lo + CHUNK],
+                                tsx[lo:lo + CHUNK])
+        spaces.append(int(sk.space(state)))
+    return state, spaces
+
+
+def test_registry_is_complete():
+    assert set(NAMES) == set(BOUNDS), "every variant needs a stated bound"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_protocol_surface(name):
+    sk = _make(name)
+    for method in ("init", "update", "update_block", "query_rows", "query",
+                   "space", "merge"):
+        assert callable(getattr(sk, method)), f"{name}.{method} missing"
+    for key in ("d", "eps", "window", "ell", "backend"):
+        assert key in sk.meta, f"{name}.meta[{key!r}] missing"
+    assert sk.meta["backend"] in ("jax", "host")
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_state_shapes_dtypes_stable(name):
+    """One update / one block must preserve the state's tree structure,
+    leaf shapes and dtypes (the fixed-shape contract jit relies on)."""
+    sk = _make(name)
+    A = _stream(n=CHUNK)
+    ts = np.arange(1, CHUNK + 1, dtype=np.int32)
+    state = sk.init()
+    if sk.meta["backend"] == "host":
+        state = sk.update(state, A[0], 1)
+        state = sk.update_block(state, A[1:], ts[1:])
+        q = np.asarray(sk.query(state, CHUNK))
+        assert q.ndim == 2 and q.shape[1] == D and q.dtype == np.float32
+        assert int(sk.space(state)) >= 0
+        return
+    spec0 = jax.tree.map(lambda x: (jnp.shape(x), jnp.result_type(x)), state)
+    s1 = sk.update(state, jnp.asarray(A[0]), 1)
+    s2 = sk.update_block(s1, jnp.asarray(A[1:]), jnp.asarray(ts[1:]))
+    for st in (s1, s2):
+        spec = jax.tree.map(lambda x: (jnp.shape(x), jnp.result_type(x)), st)
+        assert spec == spec0, f"{name}: state spec drifted"
+    q = sk.query(s2, CHUNK)
+    assert q.shape == (2 * sk.meta["ell"], D) and q.dtype == jnp.float32
+    rows = sk.query_rows(s2, CHUNK)
+    assert rows.ndim == 2 and rows.shape[1] == D
+    assert jnp.shape(sk.space(s2)) == ()
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_update_block_matches_repeated_update(name):
+    n = 48
+    A = _stream(n=n, seed=5) * 0.9          # off the θ knife edge
+    ts = np.arange(1, n + 1, dtype=np.int32)
+    sk = _make(name)
+    rows = jnp.asarray(A) if sk.meta["backend"] == "jax" else A
+    blocked = sk.update_block(sk.init(), rows, ts)
+    state = sk.init()
+    for i in range(n):
+        state = sk.update(state, rows[i], int(ts[i]))
+    np.testing.assert_allclose(
+        np.asarray(sk.query_rows(blocked, n)),
+        np.asarray(sk.query_rows(state, n)), atol=1e-5,
+        err_msg=f"{name}: update_block ≠ repeated update")
+    assert int(sk.space(blocked)) == int(sk.space(state))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_space_never_exceeds_stated_bound(name):
+    sk = _make(name)
+    A = _stream()
+    ts = np.arange(1, N_ROWS + 1, dtype=np.int32)
+    state, spaces = _feed_chunked(sk, A, ts)
+    bound = _space_bound(sk, state)
+    assert max(spaces) <= bound, \
+        f"{name}: live rows {max(spaces)} > stated bound {bound}"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_query_error_within_bound(name):
+    sk = _make(name)
+    A = _stream()
+    ts = np.arange(1, N_ROWS + 1, dtype=np.int32)
+    state, _ = _feed_chunked(sk, A, ts)
+    AW = A if name == "fd" else A[N_ROWS - WINDOW:]   # fd has no expiry
+    err = _rel_err(AW, sk.query(state, N_ROWS))
+    assert err <= BOUNDS[name], f"{name}: rel err {err:.4f}"
+    err_rows = _rel_err(AW, sk.query_rows(state, N_ROWS))
+    assert err_rows <= BOUNDS[name] + 1e-6
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_merge(name):
+    """Two sketches over disjoint streams on a shared timeline.
+
+    Deterministic FD-family variants must meet the additive mergeability
+    bound  err(merged) ≤ err₁ + err₂ + ‖B₁;B₂‖_F²/ℓ  against the union
+    window.  Samplers are checked structurally (their guarantee is in
+    expectation).  LM-FD must raise its documented NotImplementedError —
+    an explicit refusal, never a silent pass.
+    """
+    sk = _make(name)
+    n = N_ROWS
+    A, B = _stream(seed=11), _stream(seed=12)
+    ts = np.arange(1, n + 1, dtype=np.int32)
+    if sk.meta["backend"] == "jax":
+        A, B, ts = jnp.asarray(A), jnp.asarray(B), jnp.asarray(ts)
+    if name in ("swr", "swor"):
+        # identically-seeded samplers have byte-identical (fully
+        # correlated) priority-key streams — combine must refuse them
+        same = sk.update_block(sk.init(), A, ts)
+        with pytest.raises(ValueError):
+            sk.merge(same, sk.update_block(sk.init(), B, ts), n)
+        sk1 = make_sketch(name, d=D, eps=EPS, window=WINDOW, seed=1)
+        sk2 = make_sketch(name, d=D, eps=EPS, window=WINDOW, seed=2)
+        s1 = sk1.update_block(sk1.init(), A, ts)
+        s2 = sk2.update_block(sk2.init(), B, ts)
+    else:
+        s1 = sk.update_block(sk.init(), A, ts)
+        s2 = sk.update_block(sk.init(), B, ts)
+
+    if name == "lmfd":
+        with pytest.raises(NotImplementedError):
+            sk.merge(s1, s2, n)
+        return
+
+    space1, space2 = int(sk.space(s1)), int(sk.space(s2))
+    q1 = np.asarray(sk.query_rows(s1, n), np.float64)
+    q2 = np.asarray(sk.query_rows(s2, n), np.float64)
+    A, B = np.asarray(A), np.asarray(B)
+    merged = sk.merge(s1, s2, n)
+
+    q = np.asarray(sk.query(merged, n))
+    assert q.ndim == 2 and q.shape[1] == D
+    assert int(sk.space(merged)) <= space1 + space2
+
+    if name in ("swr", "swor"):
+        return                                # statistical guarantee only
+    w1 = A if name == "fd" else A[n - WINDOW:]
+    w2 = B if name == "fd" else B[n - WINDOW:]
+    union = np.vstack([w1, w2])
+    ell = sk.meta["ell"]
+    budget = (_spec_err2(w1, q1) + _spec_err2(w2, q2)
+              + (np.sum(q1 * q1) + np.sum(q2 * q2)) / ell)
+    err = _spec_err2(union, q)
+    assert err <= budget * (1 + 1e-3) + 1e-6, \
+        f"{name}: merged err {err:.4f} > additive budget {budget:.4f}"
