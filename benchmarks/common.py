@@ -154,38 +154,125 @@ def run_sketch(name: str, rows: np.ndarray, *, eps: float, window: int,
 
 
 def run_fleet(name: str, streams_rows: np.ndarray, *, eps: float,
-              window: int, shard: bool = True, **hyper):
+              window: int, shard: bool = True, ckpt_dir: Optional[str] = None,
+              ckpt_at: Optional[int] = None, resume: bool = False, **hyper):
     """Stream an ``(S, n, d)`` fleet through ``shard_streams`` (or
     ``vmap_streams`` when ``shard=False``), one program call for the whole
     fleet.  Returns ``(rows_per_sec, wall_s, state, fleet)`` — wall time
-    excludes compilation (one full same-shape warmup pass; ``update_block``
+    excludes compilation (full same-shape warmup passes; ``update_block``
     is jitted per block shape, so a smaller warmup would not populate the
     compile cache).  JAX-backed variants only — host baselines have no
     fleet path (stream them one at a time via ``run_sketch``).
+
+    Checkpointing (the save→kill→restore path):
+
+    * ``ckpt_dir`` set, ``resume=False`` — the stream is cut at row
+      ``ckpt_at`` (default ``n // 2``): rows ``[0, ckpt_at)`` are
+      ingested, the fleet is checkpointed via ``save_fleet`` (wall time
+      includes the save — that's the number being measured), then the
+      remainder is ingested.
+    * ``resume=True`` — the fleet, its state, and the fleet clock are
+      restored from ``ckpt_dir`` (onto however many devices exist *now* —
+      the elastic restart), and only rows past the saved clock are
+      ingested.  ``streams_rows`` must be the same full stream; the
+      already-ingested prefix is skipped by the restored clock.
     """
+    import hashlib
+
     import jax
     import jax.numpy as jnp
 
-    from repro.sketch.api import make_sketch, shard_streams, vmap_streams
+    from repro.sketch.api import (make_sketch, restore_fleet, save_fleet,
+                                  shard_streams, vmap_streams)
 
     S, n, d = streams_rows.shape
+    data = jnp.asarray(streams_rows, jnp.float32)
+    fingerprint = None
+    if ckpt_dir is not None:             # only the ckpt/resume paths pay
+        fingerprint = hashlib.sha1(
+            np.ascontiguousarray(streams_rows, np.float32).tobytes()
+        ).hexdigest()[:16]
+
+    def ingest(fleet, segments, start_state, on_segment=None):
+        """Warm the per-shape compile caches on throwaway init states,
+        then run the timed pass from ``start_state``; ``on_segment(i,
+        state)`` fires after each segment (inside the timed window — a
+        mid-stream save is part of what's measured)."""
+        for rows, ts in segments:
+            jax.block_until_ready(
+                fleet.update_block(fleet.init(), rows, ts))
+        state = start_state
+        t0 = time.time()
+        for i, (rows, ts) in enumerate(segments):
+            state = fleet.update_block(state, rows, ts)
+            if on_segment is not None:
+                on_segment(i, state)
+        jax.block_until_ready(state)
+        return state, time.time() - t0
+
+    ts_all = jnp.arange(1, n + 1, dtype=jnp.int32)
+
+    if resume:
+        if ckpt_dir is None:
+            raise ValueError("resume=True needs ckpt_dir")
+        fc = restore_fleet(ckpt_dir)
+        fleet, k = fc.fleet, int(fc.t)
+        if int(fleet.meta["streams"]) != S:
+            raise ValueError(
+                f"checkpoint holds {fleet.meta['streams']} streams, data "
+                f"has {S}")
+        # the restored fleet IS the configuration being measured — the
+        # caller's args must match it or the reported numbers are
+        # mislabeled
+        ss = fc.manifest["sketch_spec"]
+        spec = ss["sketch"]
+        asked = {"name": name, "d": int(d), "eps": float(eps),
+                 "window": int(window), "hyper": dict(hyper),
+                 "sharded": bool(shard)}
+        saved = {"name": spec["name"], "d": int(spec["d"]),
+                 "eps": float(spec["eps"]), "window": int(spec["window"]),
+                 "hyper": dict(spec.get("hyper", {})),
+                 "sharded": bool(ss.get("sharded"))}
+        if asked != saved:
+            raise ValueError(
+                f"resume config mismatch: asked for {asked}, checkpoint "
+                f"holds {saved}")
+        # ...and the checkpoint must come from THIS stream: a stale save
+        # of a different stream in a reused ckpt_dir would otherwise be
+        # silently continued (same config, wrong prefix)
+        saved_fp = ss.get("stream_fingerprint")
+        if saved_fp is not None and saved_fp != fingerprint:
+            raise ValueError(
+                f"resume stream mismatch: checkpoint fingerprint "
+                f"{saved_fp} != data fingerprint {fingerprint} — the "
+                "checkpoint was saved from a different stream")
+        state, wall = ingest(fleet, [(data[:, k:], ts_all[k:])], fc.state)
+        return S * (n - k) / max(wall, 1e-9), wall, state, fleet
+
     sk = make_sketch(name, d=d, eps=eps, window=window, **hyper)
     if sk.meta["backend"] != "jax":
         raise ValueError(
             f"run_fleet requires a JAX-backed sketch, got {name!r}: host "
             "baselines have no multi-stream fleet path — loop run_sketch")
     fleet = shard_streams(sk, S) if shard else vmap_streams(sk, S)
-    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
-    data = jnp.asarray(streams_rows, jnp.float32)
 
-    warm = fleet.update_block(fleet.init(), data, ts)   # compile cache
-    jax.block_until_ready(warm)
+    if ckpt_dir is None:
+        segments = [(data, ts_all)]
+        on_segment = None
+    else:
+        k = n // 2 if ckpt_at is None else int(ckpt_at)
+        if not 0 < k <= n:
+            raise ValueError(f"ckpt_at={k} outside (0, {n}]")
+        segments = [(data[:, :k], ts_all[:k])]
+        if k < n:
+            segments.append((data[:, k:], ts_all[k:]))
 
-    state = fleet.init()
-    t0 = time.time()
-    state = fleet.update_block(state, data, ts)
-    jax.block_until_ready(state)
-    wall = time.time() - t0
+        def on_segment(i, state):
+            if i == 0:
+                save_fleet(ckpt_dir, fleet, state, k,
+                           spec_extra={"stream_fingerprint": fingerprint})
+
+    state, wall = ingest(fleet, segments, fleet.init(), on_segment)
     return S * n / max(wall, 1e-9), wall, state, fleet
 
 

@@ -76,6 +76,13 @@ class ServeEngine:
     # -- admission ---------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        b_max = max(self.ecfg.prefill_buckets)
+        if len(req.prompt) > b_max:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the largest "
+                f"prefill bucket ({b_max}); admitting it would silently "
+                f"drop all but the last {b_max} tokens — chunk the prompt "
+                "or enlarge EngineConfig.prefill_buckets")
         req.t_submit = time.time()
         req.out_tokens = []
         self.queue.append(req)
@@ -84,12 +91,15 @@ class ServeEngine:
         for b in self.ecfg.prefill_buckets:
             if n <= b:
                 return b
-        return self.ecfg.prefill_buckets[-1]
+        # unreachable through submit(), which rejects over-long prompts
+        raise ValueError(
+            f"no prefill bucket holds {n} tokens "
+            f"(buckets={self.ecfg.prefill_buckets})")
 
     def _admit(self, slot: int, req: Request) -> None:
         b = self._bucket(len(req.prompt))
         prompt = np.zeros((1, b), np.int32)
-        prompt[0, -len(req.prompt):] = req.prompt[-b:]
+        prompt[0, -len(req.prompt):] = req.prompt
         tok, caches1 = self._prefill_b1(self.params,
                                         {"tokens": jnp.asarray(prompt)})
         # splice the single-request caches into slot `slot`
@@ -163,6 +173,80 @@ class SketchFleetEngine:
         self.rows_ingested = 0
         self._pending: List[deque] = [deque() for _ in range(self.S)]
 
+    # -- persistence --------------------------------------------------------
+
+    def checkpoint(self, path: str, *, keep: int = 3) -> str:
+        """Atomic engine checkpoint: the sharded fleet state, the fleet
+        clock, and every not-yet-ingested pending row.
+
+        The window is defined by the clock, so the clock is part of the
+        state: a restore that did not realign ``t`` would silently expire
+        (or resurrect) every user's window.  Pending queues are packed
+        into two flat arrays (FIFO order per user is preserved because
+        users are walked in order), keeping the one-``.npy``-per-leaf
+        checkpoint format.
+        """
+        from repro.sketch.api import save_fleet
+
+        users: List[int] = []
+        rows: List[np.ndarray] = []
+        for u, q in enumerate(self._pending):
+            for r in q:
+                users.append(u)
+                rows.append(np.asarray(r, np.float32))
+        aux = {
+            "pending_user": np.asarray(users, np.int32),
+            "pending_rows": (np.stack(rows) if rows
+                             else np.zeros((0, self.d), np.float32)),
+        }
+        # rows_ingested rides in the JSON spec (arbitrary-precision int —
+        # an array leaf would be silently downcast by x64-disabled jax)
+        return save_fleet(path, self.fleet, self.state, self.t, aux=aux,
+                          spec_extra={"engine": {
+                              "block": self.block,
+                              "rows_ingested": int(self.rows_ingested)}},
+                          keep=keep)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, mesh=None, *,
+                        step: Optional[int] = None) -> "SketchFleetEngine":
+        """Rebuild an engine from :meth:`checkpoint` — elastically.
+
+        The sketch comes back from the registry via the checkpoint's
+        ``sketch_spec``; the fleet state is laid out on ``mesh`` (default:
+        all local devices — the restore-time device count may differ from
+        the save-time one as long as it divides the fleet size).  Clock,
+        ingested-row counter, and pending per-user queues are realigned so
+        subsequent ``step``/``query_user``/``query_global`` calls are
+        numerically identical to an uninterrupted run.
+        """
+        from repro.sketch.api import restore_fleet
+
+        fc = restore_fleet(path, mesh, step=step)
+        ss = fc.manifest["sketch_spec"]
+        espec = ss.get("engine")
+        if espec is None:
+            raise ValueError(
+                f"checkpoint under {path!r} is a bare fleet (no engine "
+                "section) — restore it with repro.sketch.api.restore_fleet")
+        spec = ss["sketch"]
+        # assemble around the restored fleet/state directly — running
+        # __init__ would rebuild the fleet and materialize a full
+        # throwaway init() state on devices at exactly the restore moment
+        eng = cls.__new__(cls)
+        eng.base = fc.fleet.meta["base"]
+        eng.fleet = fc.fleet
+        eng.S = int(ss["streams"])
+        eng.d = int(spec["d"])
+        eng.block = int(espec["block"])
+        eng.state = fc.state
+        eng.t = int(fc.t)
+        eng.rows_ingested = int(espec.get("rows_ingested", 0))
+        eng._pending = [deque() for _ in range(eng.S)]
+        for u, row in zip(fc.aux["pending_user"], fc.aux["pending_rows"]):
+            eng._pending[int(u)].append(np.asarray(row, np.float32))
+        return eng
+
     # -- admission ---------------------------------------------------------
 
     def submit(self, user: int, row: np.ndarray) -> None:
@@ -210,14 +294,25 @@ class SketchFleetEngine:
 
 def _splice_caches(cfg: ModelConfig, big, one, slot: int, s_max: int):
     """Insert a batch-1 prefill cache into batch slot `slot` of the engine
-    cache, right-aligned into the s_max-long buffers where seq-shaped."""
+    cache, left-aligned into the s_max-long buffers where seq-shaped.
+
+    Left alignment is the decode-step convention: valid cache entries
+    occupy positions ``[0, length)`` and ``kv_cache_append`` writes the
+    next token at index ``length`` (``decode_attention`` masks
+    ``kpos < length``), so a b-token prefill cache lands at ``[0, b)``
+    with zero-padding *after* it and ``length = b`` picks up exactly where
+    prefill stopped.  Right-aligning the data into ``[s_max-b, s_max)``
+    would desynchronize it from the write position.  (The token-level
+    right-alignment of a short prompt *within* its prefill bucket in
+    ``_admit`` is a separate, upstream padding choice.)"""
 
     def leaf(b, o):
         if b.ndim == 0 or o.shape[0] != b.shape[0]:
             return b
         # layer-stacked leaves: dim0 = layers, dim1 = batch
         if b.ndim >= 2 and o.shape[1] == 1 and b.shape[2:] != o.shape[2:]:
-            # seq-capacity mismatch (prefill len < s_max): right-align pad
+            # seq-capacity mismatch (prefill len < s_max): left-align —
+            # pad zeros AFTER the cache so entry i stays at position i
             pad = [(0, 0)] * o.ndim
             pad[2] = (0, b.shape[2] - o.shape[2]) if b.ndim > 2 else (0, 0)
             o = jnp.pad(o, pad)

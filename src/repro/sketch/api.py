@@ -122,12 +122,30 @@ def available_sketches() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def _copy_meta(sk: SlidingSketch) -> SlidingSketch:
+    """Per-call defensive copy of ``meta`` — the memo cache must never hand
+    out a dict one consumer can mutate into every future ``make_sketch``
+    hit for that key.  Shallow at the top level (the jitted protocol
+    functions stay shared — that is the point of the memo), with the
+    ``spec`` section copied one level deeper since it is what fleet
+    checkpoints serialize."""
+    meta = dict(sk.meta)
+    spec = meta.get("spec")
+    if spec is not None:
+        meta["spec"] = dict(spec, hyper=dict(spec.get("hyper", {})))
+    return sk._replace(meta=meta)
+
+
 def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
                 window: int = 1024, **hyper) -> SlidingSketch:
     """Construct a registered sketch variant behind the unified protocol.
 
     Memoized on (name, d, eps, window, hyper) when hashable, so the jitted
-    ``update_block`` of JAX variants compiles once per configuration.
+    ``update_block`` of JAX variants compiles once per configuration.  The
+    returned ``meta`` dict is a per-call copy (mutating it cannot poison
+    future hits) and carries ``meta["spec"]`` — the exact constructor
+    arguments — which is what ``save_fleet`` persists so a checkpoint can
+    rebuild the sketch from the registry alone.
     """
     if name not in _REGISTRY:
         raise KeyError(
@@ -139,11 +157,13 @@ def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
     except TypeError:           # unhashable hyperparameter → skip the cache
         key, cached = None, None
     if cached is not None:
-        return cached
+        return _copy_meta(cached)
     sk = _REGISTRY[name](int(d), float(eps), int(window), **hyper)
+    sk.meta["spec"] = {"name": name, "d": int(d), "eps": float(eps),
+                       "window": int(window), "hyper": dict(hyper)}
     if key is not None:
         _CACHE[key] = sk
-    return sk
+    return _copy_meta(sk)
 
 
 # ---------------------------------------------------------------------------
@@ -541,7 +561,8 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
 
     return SlidingSketch(
         name=f"shard[{sk.name}x{S}/{ndev}]",
-        meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev),
+        meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev,
+                  axis=axis),
         init=init,
         update=fleet.update,
         update_block=update_block,
@@ -550,3 +571,141 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         space=fleet.space,
         merge=fleet.merge,
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet persistence — mesh-aware checkpoint/restore over train/checkpoint.py
+# ---------------------------------------------------------------------------
+
+
+class FleetCheckpoint(NamedTuple):
+    """What ``restore_fleet`` hands back: a rebuilt fleet (laid out on the
+    *target* mesh), its restored state, the fleet clock at save time, any
+    auxiliary host arrays saved alongside, and the raw manifest."""
+
+    fleet: SlidingSketch
+    state: Any
+    t: int
+    aux: Dict[str, np.ndarray]
+    manifest: Dict[str, Any]
+
+
+def save_fleet(path: str, fleet: SlidingSketch, state, t, *,
+               aux: Dict[str, np.ndarray] | None = None,
+               spec_extra: Dict[str, Any] | None = None,
+               keep: int = 3) -> str:
+    """Atomic mesh-agnostic checkpoint of a fleet's state at clock ``t``.
+
+    The state pytree is pure data (FD-style sketches carry no closures),
+    so the on-disk format is the shared ``train/checkpoint.py`` layout —
+    one ``.npy`` per leaf behind an atomically-renamed manifest — with a
+    ``sketch_spec`` manifest section recording everything needed to
+    rebuild the fleet from the registry: the base sketch's ``make_sketch``
+    name/kwargs, the fleet size, the mesh axis name, and the fleet clock.
+    Leaves are gathered to full host arrays, which is the whole elastic
+    story: :func:`restore_fleet` re-lays them out on whatever mesh the
+    restoring process has.
+
+    ``aux``: optional flat ``{name: array}`` of host-side extras persisted
+    in the same atomic checkpoint (e.g. a serving engine's pending
+    queues).  ``spec_extra``: optional JSON-serializable entries merged
+    into the ``sketch_spec`` section.
+    """
+    import json
+
+    from repro.train import checkpoint as ckpt
+
+    base = fleet.meta.get("base")
+    if base is None:
+        raise ValueError(
+            f"save_fleet needs a fleet from vmap_streams/shard_streams, "
+            f"got {fleet.name!r}")
+    spec = base.meta.get("spec")
+    if spec is None:
+        raise ValueError(
+            f"fleet base {base.name!r} has no construction spec — build it "
+            "via make_sketch() so the checkpoint can name it in the "
+            "registry")
+    mesh = fleet.meta.get("mesh")
+    aux = dict(aux or {})
+    sketch_spec: Dict[str, Any] = {
+        "sketch": spec,
+        "streams": int(fleet.meta["streams"]),
+        "sharded": mesh is not None,
+        "mesh_axis": fleet.meta.get("axis"),
+        "mesh_devices": (int(fleet.meta["devices"])
+                         if mesh is not None else None),
+        "t": int(t),
+        "aux_keys": sorted(aux),
+    }
+    if spec_extra:
+        sketch_spec.update(spec_extra)
+    try:
+        json.dumps(sketch_spec)
+    except TypeError as e:
+        raise ValueError(
+            f"fleet checkpoint spec is not JSON-serializable ({e}); "
+            "sketch hyperparameters and spec_extra must be plain "
+            "scalars/strings") from e
+    tree = {"aux": {k: np.asarray(aux[k]) for k in aux},
+            "state": state}
+    return ckpt.save(
+        path, int(t), tree, sketch_spec=sketch_spec,
+        mesh_shape=tuple(np.shape(mesh.devices)) if mesh is not None
+        else None,
+        keep=keep)
+
+
+def restore_fleet(path: str, mesh=None, *,
+                  step: int | None = None) -> FleetCheckpoint:
+    """Rebuild a fleet from a :func:`save_fleet` checkpoint — elastically.
+
+    The base sketch is reconstructed from the registry using the
+    ``sketch_spec`` manifest section, the fleet is re-laid-out with
+    ``shard_streams`` over ``mesh`` (default: a fresh 1-D mesh over all
+    local devices — the *restoring* process's device count, which need not
+    match the saving one as long as it divides the fleet size), and every
+    state leaf is ``device_put`` with the target mesh's shardings.
+    Restoring a ``vmap_streams`` (unsharded) checkpoint ignores ``mesh``.
+
+    Returns a :class:`FleetCheckpoint`; continuing the stream from
+    ``.state`` at clock ``.t`` is numerically identical to never having
+    stopped (the sketches are pure data and the clock is persisted).
+    """
+    from repro.train import checkpoint as ckpt
+
+    manifest = ckpt.read_manifest(path, step=step)
+    ss = manifest.get("sketch_spec")
+    if not ss:
+        raise ValueError(
+            f"checkpoint under {path!r} has no sketch_spec manifest "
+            "section — not a fleet checkpoint (train states restore via "
+            "repro.train.checkpoint.restore)")
+    spec = ss["sketch"]
+    sk = make_sketch(spec["name"], d=spec["d"], eps=spec["eps"],
+                     window=spec["window"], **spec.get("hyper", {}))
+    S = int(ss["streams"])
+    shardings = None
+    if ss.get("sharded"):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        axis = ss.get("mesh_axis") or "streams"
+        fleet = shard_streams(sk, S, mesh, axis=axis)
+        sharding = NamedSharding(fleet.meta["mesh"], P(axis))
+    else:
+        fleet, sharding = vmap_streams(sk, S), None
+    state_like = jax.eval_shape(lambda: fleet.init())
+    aux_keys = list(ss.get("aux_keys", []))
+    tree_like = {"aux": {k: 0 for k in aux_keys}, "state": state_like}
+    if sharding is not None:
+        shardings = {"aux": {k: None for k in aux_keys},
+                     "state": jax.tree.map(lambda _: sharding, state_like)}
+    # pin the step resolved above — a concurrent saver landing a new step
+    # between read_manifest and restore must not change which checkpoint
+    # the leaves come from (the template tree was built for THIS manifest)
+    tree, manifest = ckpt.restore(path, tree_like,
+                                  step=int(manifest["step"]),
+                                  shardings=shardings)
+    aux = {k: np.asarray(v) for k, v in tree["aux"].items()}
+    return FleetCheckpoint(fleet, tree["state"], int(ss["t"]), aux,
+                           manifest)

@@ -2,24 +2,37 @@
 restore-with-resharding (elastic restart onto a different mesh), async
 save thread, and retention.
 
+This is the shared persistence layer for *both* train states and sketch
+fleets: the on-disk format is pytree-agnostic, and the manifest carries an
+optional ``sketch_spec`` section (``make_sketch`` name/kwargs, fleet size,
+mesh axis, fleet clock) that lets ``repro.sketch.api.restore_fleet``
+reconstruct a serving fleet from the registry without the caller holding
+a live template tree.
+
 Layout::
 
     <dir>/step_000123/
         manifest.json        {step, tree structure, leaf dtypes/shapes,
-                              mesh shape, data state, wallclock}
+                              mesh shape, data state, sketch spec,
+                              wallclock}
         leaf_000000.npy ...  one file per pytree leaf (path-ordered)
 
 Writes go to ``<dir>/.tmp-<pid>-<step>`` and are ``os.replace``d into
 place — a crash mid-save never corrupts the latest checkpoint (the rename
-is atomic on POSIX).  Restore maps leaves back and ``jax.device_put``s
-them with the *target* mesh's shardings, so a run checkpointed on one mesh
-restarts on another (elastic scale-up/down) without conversion tools.
+is atomic on POSIX).  Re-saving an existing step renames the old directory
+aside first and prunes it only after the new one has landed
+(replace-then-prune), so at no instant is the only complete copy gone.
+Restore maps leaves back and ``jax.device_put``s them with the *target*
+mesh's shardings, so a run checkpointed on one mesh restarts on another
+(elastic scale-up/down) without conversion tools.
 """
 
 from __future__ import annotations
 
+import itertools
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -27,6 +40,51 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)$")
+_JUNK_RE = re.compile(r"\.(?:tmp|old)-(\d+)-")
+_TRASH_COUNTER = itertools.count()
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except OSError:          # EPERM etc. — someone owns it, it's alive
+        return True
+    return True
+
+
+def _sweep_stale(ckpt_dir: str) -> None:
+    """Garbage-collect ``.tmp-*``/``.old-*`` save intermediates whose
+    owning pid is dead — the debris a crashed (re-)save leaves behind.
+    Live pids are left alone: another process (or our own async saver)
+    may still be mid-save.
+
+    Rescue before delete: a crash inside the re-save rename window leaves
+    a step with NO visible ``step_*`` dir but complete copies under
+    ``.tmp-*``/``.old-*`` (the manifest is written after every leaf, so
+    its presence proves completeness).  Such an orphan is promoted back
+    to its ``step_*`` name — ``.tmp`` first, since it holds the newer
+    data — instead of being destroyed."""
+    junk = [d for d in os.listdir(ckpt_dir)
+            if (m := _JUNK_RE.match(d)) and not _pid_alive(int(m.group(1)))]
+    for d in sorted(junk, key=lambda s: not s.startswith(".tmp")):
+        path = os.path.join(ckpt_dir, d)
+        mpath = os.path.join(path, "manifest.json")
+        if os.path.isfile(mpath):
+            try:
+                with open(mpath) as f:
+                    step = int(json.load(f)["step"])
+                final = os.path.join(ckpt_dir, f"step_{step:09d}")
+                if not os.path.exists(final):
+                    os.replace(path, final)
+                    continue
+            except (OSError, ValueError, KeyError,
+                    json.JSONDecodeError):
+                pass                     # unreadable/raced → plain debris
+        shutil.rmtree(path, ignore_errors=True)
 
 
 def _flatten(tree) -> Tuple[List[Any], Any]:
@@ -41,19 +99,27 @@ def _paths(tree) -> List[str]:
 
 def save(ckpt_dir: str, step: int, tree, *, data_state: Optional[Dict] = None,
          mesh_shape: Optional[Tuple[int, ...]] = None,
+         sketch_spec: Optional[Dict] = None,
          keep: int = 3) -> str:
-    """Blocking atomic save.  Returns the final checkpoint path."""
+    """Blocking atomic save.  Returns the final checkpoint path.
+
+    ``sketch_spec``: optional JSON section recorded in the manifest for
+    fleet checkpoints (sketch registry name/kwargs, fleet size, mesh axis,
+    fleet clock) — see ``repro.sketch.api.save_fleet``.
+    """
     leaves, _ = _flatten(tree)
     paths = _paths(tree)
     final = os.path.join(ckpt_dir, f"step_{step:09d}")
     tmp = os.path.join(ckpt_dir, f".tmp-{os.getpid()}-{step}")
     os.makedirs(tmp, exist_ok=True)
+    _sweep_stale(ckpt_dir)
     manifest = {
         "step": int(step),
         "paths": paths,
         "dtypes": [], "shapes": [],
         "mesh_shape": list(mesh_shape) if mesh_shape else None,
         "data_state": data_state,
+        "sketch_spec": sketch_spec,
         "wallclock": time.time(),
         "format": 1,
     }
@@ -65,10 +131,28 @@ def save(ckpt_dir: str, step: int, tree, *, data_state: Optional[Dict] = None,
                 arr.astype(_np_safe(arr.dtype)))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    # Replace-then-prune: never destroy the existing copy before the new
+    # one has landed.  A crash between the two renames leaves BOTH copies
+    # on disk (the old under ``.old-*``, the new under ``.tmp-*``) —
+    # nothing readable is lost, neither hidden name is ever picked up by
+    # ``latest_step``, and the next save's ``_sweep_stale`` promotes the
+    # newest complete orphan back to its ``step_*`` name.
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    _retain(ckpt_dir, keep)
+        while True:
+            trash = os.path.join(
+                ckpt_dir,
+                f".old-{os.getpid()}-{step}-{next(_TRASH_COUNTER)}")
+            if not os.path.exists(trash):   # stale trash from a crash
+                break
+        os.replace(final, trash)
+        os.replace(tmp, final)
+        shutil.rmtree(trash, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
+    # a save must never prune the checkpoint it just wrote — neither via
+    # keep=0 nor by ranking below stale newer steps after a rollback —
+    # else it returns a path to a deleted directory
+    _retain(ckpt_dir, max(int(keep), 1), protect=int(step))
     return final
 
 
@@ -86,20 +170,52 @@ def _np_restore(arr: np.ndarray, dtype: str) -> np.ndarray:
     return arr.astype(dtype)
 
 
-def _retain(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(
-        d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
-    for d in steps[:-keep]:
+def _step_entries(ckpt_dir: str) -> List[Tuple[int, str]]:
+    """``(step, dirname)`` for every well-formed ``step_<digits>`` entry,
+    numerically sorted.  Stray entries (``step_final``, editor droppings,
+    ``.tmp-*``/``.old-*`` save intermediates) are ignored rather than
+    crashing the parse."""
+    out = []
+    for d in os.listdir(ckpt_dir):
+        m = _STEP_RE.fullmatch(d)
+        if m and os.path.isdir(os.path.join(ckpt_dir, d)):
+            out.append((int(m.group(1)), d))
+    return sorted(out)
+
+
+def _retain(ckpt_dir: str, keep: int, *,
+            protect: Optional[int] = None) -> None:
+    """Prune to the newest ``keep`` checkpoints (``keep=0`` deletes all).
+
+    ``protect``: a step number that is never pruned regardless of rank —
+    ``save`` passes the step it just wrote, so saving *below* stale newer
+    steps (resume from a rollback) can't destroy the fresh checkpoint."""
+    steps = _step_entries(ckpt_dir)
+    n_del = max(len(steps) - keep, 0)
+    for s, d in steps[:n_del]:
+        if protect is not None and s == protect:
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = sorted(
-        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-        if d.startswith("step_"))
-    return steps[-1] if steps else None
+    steps = _step_entries(ckpt_dir)
+    return steps[-1][0] if steps else None
+
+
+def read_manifest(ckpt_dir: str, *, step: Optional[int] = None) -> Dict:
+    """Load a checkpoint's manifest without touching the leaf files — the
+    cheap first half of a restore, used when the manifest itself decides
+    how to rebuild the template tree (e.g. ``restore_fleet``)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
@@ -111,13 +227,8 @@ def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
     whole elastic-restart mechanism: the on-disk layout is mesh-agnostic
     (full arrays), so any target mesh works.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:09d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(ckpt_dir, step=step)
+    path = os.path.join(ckpt_dir, f"step_{manifest['step']:09d}")
     _, treedef = _flatten(tree_like)
     n = treedef.num_leaves
     assert n == len(manifest["paths"]), \

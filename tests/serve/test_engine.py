@@ -1,0 +1,102 @@
+"""ServeEngine serving-path regressions: prefill-cache splice alignment
+(the decode convention is left-aligned — contents at ``[0, length)``,
+next write at ``length``) and over-long prompt admission.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import api
+from repro.models.params import init_params
+from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return get_config("smollm-135m").reduced()
+
+
+@pytest.fixture(scope="module")
+def tiny_params(tiny_cfg):
+    return init_params(api.param_defs(tiny_cfg), jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(slots=2, s_max=64, prefill_buckets=(16,))
+    defaults.update(kw)
+    return ServeEngine(cfg, params, EngineConfig(**defaults),
+                       dtype=np.float32)
+
+
+def test_splice_left_aligns_into_long_cache_slot(tiny_cfg, tiny_params):
+    """Admit a 5-token prompt (bucket 16) into s_max=64 buffers: the
+    prefill KV must land at positions [0, 16) with zeros after, length=16,
+    and each decode tick must append at exactly position `length`."""
+    eng = _engine(tiny_cfg, tiny_params)
+    rng = np.random.default_rng(1)
+    eng.submit(Request(uid=0,
+                       prompt=rng.integers(0, tiny_cfg.vocab, 5)
+                       .astype(np.int32), max_new=3))
+    eng.step()                              # admit + first decode tick
+    k = np.asarray(eng.caches.k, np.float32)     # (L, B, s_max, Hkv, dh)
+    length = np.asarray(eng.caches.length)       # (L, B)
+    assert (length[:, 0] == 17).all()            # 16 prefill + 1 decode
+    norms = np.linalg.norm(k[:, 0], axis=(-2, -1))   # (L, s_max)
+    assert (norms[:, :17] > 0).all(), "prefill cache not left-aligned"
+    assert (norms[:, 17:] == 0).all(), \
+        "cache content beyond `length` — splice misaligned vs decode"
+    eng.step()
+    norms = np.linalg.norm(
+        np.asarray(eng.caches.k, np.float32)[:, 0], axis=(-2, -1))
+    assert (norms[:, 17] > 0).all() and (norms[:, 18:] == 0).all(), \
+        "decode tick did not continue from the spliced position"
+
+
+def test_decode_after_splice_matches_teacher_forced_prefill(tiny_cfg,
+                                                            tiny_params):
+    """Greedy decode through the engine (splice + cached decode steps)
+    must produce the same tokens as repeatedly prefilling the growing
+    sequence — the cache path is an optimization, not a semantics change."""
+    b, steps = 16, 3
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, tiny_cfg.vocab, 6).astype(np.int32)
+
+    # reference: teacher-forced — argmax over full-context prefill logits,
+    # prompt padded into its bucket exactly as _admit does
+    seq = np.zeros((1, b), np.int32)
+    seq[0, -len(prompt):] = prompt
+    expected = []
+    for _ in range(steps + 1):
+        logits, _ = api.forward_prefill(
+            tiny_cfg, tiny_params, {"tokens": jax.numpy.asarray(seq)})
+        tok = int(np.argmax(np.asarray(logits, np.float32)[0, -1]))
+        expected.append(tok)
+        seq = np.concatenate([seq, [[tok]]], axis=1)
+
+    eng = _engine(tiny_cfg, tiny_params)
+    eng.submit(Request(uid=0, prompt=prompt, max_new=steps))
+    done = eng.run(max_ticks=50)
+    assert done[0].out_tokens == expected
+
+
+def test_submit_rejects_prompt_longer_than_largest_bucket(tiny_cfg,
+                                                          tiny_params):
+    eng = _engine(tiny_cfg, tiny_params)
+    long_prompt = np.arange(17, dtype=np.int32) % tiny_cfg.vocab
+    with pytest.raises(ValueError, match="largest prefill bucket"):
+        eng.submit(Request(uid=0, prompt=long_prompt))
+    assert not eng.queue                     # nothing was enqueued
+    # boundary: exactly the largest bucket is admissible
+    eng.submit(Request(uid=1,
+                       prompt=np.arange(16, dtype=np.int32)
+                       % tiny_cfg.vocab, max_new=1))
+    assert len(eng.queue) == 1
+
+
+def test_bucket_raises_instead_of_truncating(tiny_cfg, tiny_params):
+    eng = _engine(tiny_cfg, tiny_params)
+    assert eng._bucket(3) == 16
+    with pytest.raises(ValueError, match="no prefill bucket"):
+        eng._bucket(17)

@@ -56,9 +56,13 @@ def test_registry_covers_all_variants():
         "fd", "dsfd", "seq-dsfd", "time-dsfd", "lmfd", "difd", "swr", "swor"}
     with pytest.raises(KeyError):
         make_sketch("nope", d=4)
-    # memoized: same hashable args → same instance (shared jit cache)
-    assert make_sketch("dsfd", d=8, eps=0.25, window=32) is \
-        make_sketch("dsfd", d=8, eps=0.25, window=32)
+    # memoized: same hashable args → shared protocol fns (shared jit
+    # cache); meta is a per-call copy so callers can't poison the memo
+    sk_a = make_sketch("dsfd", d=8, eps=0.25, window=32)
+    sk_b = make_sketch("dsfd", d=8, eps=0.25, window=32)
+    assert sk_a.update_block is sk_b.update_block
+    assert sk_a.init is sk_b.init
+    assert sk_a.meta is not sk_b.meta and sk_a.meta == sk_b.meta
 
 
 @pytest.mark.parametrize("name", sorted(BOUNDS))
@@ -125,3 +129,28 @@ def test_vmap_streams_matches_sequential():
 def test_vmap_streams_rejects_host_backend():
     with pytest.raises(ValueError):
         vmap_streams(make_sketch("lmfd", d=8, eps=0.25, window=32), 4)
+
+
+def test_make_sketch_meta_isolated_per_call():
+    """The memo cache must hand each caller its own meta dict: one
+    consumer mutating ``sk.meta`` (or the nested ``spec``) must not
+    poison every future ``make_sketch`` hit for that key."""
+    sk1 = make_sketch("dsfd", d=8, eps=0.25, window=32)
+    sk1.meta["poison"] = True
+    sk1.meta["d"] = 999
+    sk1.meta["spec"]["hyper"]["evil"] = 1
+    sk2 = make_sketch("dsfd", d=8, eps=0.25, window=32)
+    assert "poison" not in sk2.meta
+    assert sk2.meta["d"] == 8
+    assert "evil" not in sk2.meta["spec"]["hyper"]
+    # the memo itself still works: jitted protocol functions are shared
+    assert sk1.update_block is sk2.update_block
+
+
+def test_make_sketch_records_construction_spec():
+    sk = make_sketch("time-dsfd", d=8, eps=0.25, window=32, R=16.0)
+    assert sk.meta["spec"] == {"name": "time-dsfd", "d": 8, "eps": 0.25,
+                               "window": 32, "hyper": {"R": 16.0}}
+    # fleets inherit the base spec (what save_fleet serializes)
+    fleet = vmap_streams(make_sketch("dsfd", d=8, eps=0.25, window=32), 4)
+    assert fleet.meta["base"].meta["spec"]["name"] == "dsfd"

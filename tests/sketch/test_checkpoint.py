@@ -1,0 +1,288 @@
+"""Fleet checkpoint/restore: golden save→restore equality, elastic restore
+onto a *different* device count (1-device save → 2-device restore, both in
+subprocesses so the XLA device count can be forced per phase), and the
+acceptance path — a ``SketchFleetEngine`` checkpointed mid-stream whose
+restored ``query_user``/``query_global`` are numerically identical to an
+uninterrupted run.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serve.engine import SketchFleetEngine
+from repro.sketch.api import (make_sketch, restore_fleet, save_fleet,
+                              shard_streams, vmap_streams)
+
+
+def _streams(S, n, d, seed=11):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(S, n, d)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    return X
+
+
+# ---------------------------------------------------------------------------
+# Golden save → restore
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,hyper", [("dsfd", {}),
+                                        ("time-dsfd", {"R": 16.0})])
+@pytest.mark.parametrize("shard", [True, False])
+def test_save_restore_roundtrip_exact(tmp_path, name, hyper, shard):
+    S, n, d, N = 4, 48, 6, 16
+    X = _streams(S, n, d)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    sk = make_sketch(name, d=d, eps=0.25, window=N, **hyper)
+    fleet = shard_streams(sk, S) if shard else vmap_streams(sk, S)
+    state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
+    save_fleet(str(tmp_path), fleet, state, n)
+
+    fc = restore_fleet(str(tmp_path))
+    assert fc.t == n
+    assert fc.manifest["sketch_spec"]["sketch"]["name"] == name
+    # bit-exact state round-trip, leaf by leaf
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(fc.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(fleet.query_rows(state, n)),
+        np.asarray(fc.fleet.query_rows(fc.state, n)))
+
+    # a restored fleet is live: continuing both gives identical queries
+    more = jnp.asarray(_streams(S, 8, d, seed=5))
+    ts2 = jnp.arange(n + 1, n + 9, dtype=jnp.int32)
+    s_a = fleet.update_block(state, more, ts2)
+    s_b = fc.fleet.update_block(fc.state, more, ts2)
+    np.testing.assert_array_equal(
+        np.asarray(fleet.query_rows(s_a, n + 8)),
+        np.asarray(fc.fleet.query_rows(s_b, n + 8)))
+
+
+def test_save_restore_aux_and_sharding_metadata(tmp_path):
+    S, n, d = 4, 16, 5
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=8)
+    fleet = shard_streams(sk, S)
+    state = fleet.update_block(
+        fleet.init(), jnp.asarray(_streams(S, n, d)),
+        jnp.arange(1, n + 1, dtype=jnp.int32))
+    aux = {"pending": np.arange(6, dtype=np.int32).reshape(2, 3),
+           "extra_rows": np.ones((0, d), np.float32)}
+    save_fleet(str(tmp_path), fleet, state, n, aux=aux,
+               spec_extra={"engine": {"block": 8}})
+    fc = restore_fleet(str(tmp_path))
+    np.testing.assert_array_equal(fc.aux["pending"], aux["pending"])
+    assert fc.aux["extra_rows"].shape == (0, d)
+    ss = fc.manifest["sketch_spec"]
+    assert ss["streams"] == S and ss["sharded"] is True
+    assert ss["mesh_axis"] == "streams"
+    assert ss["mesh_devices"] == jax.device_count()
+    assert ss["engine"] == {"block": 8}
+    # restored state is laid out for THIS process's devices
+    assert fc.fleet.meta["devices"] == jax.device_count()
+
+
+def test_save_fleet_rejects_non_fleet_and_bare_checkpoints(tmp_path):
+    sk = make_sketch("dsfd", d=4, eps=0.25, window=8)
+    with pytest.raises(ValueError, match="vmap_streams/shard_streams"):
+        save_fleet(str(tmp_path), sk, sk.init(), 0)
+    # a plain train-style checkpoint has no sketch_spec section
+    from repro.train import checkpoint as ckpt
+    ckpt.save(str(tmp_path), 1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match="sketch_spec"):
+        restore_fleet(str(tmp_path))
+
+
+def test_restored_hyperparameters_reach_the_registry(tmp_path):
+    """mode/beta/R survive the round-trip — the restored sketch is the
+    same *algorithm*, not just the same shapes."""
+    S, d = 2, 4
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=8, mode="exact",
+                     beta=2.0)
+    fleet = vmap_streams(sk, S)
+    save_fleet(str(tmp_path), fleet, fleet.init(), 0)
+    fc = restore_fleet(str(tmp_path))
+    spec = fc.fleet.meta["base"].meta["spec"]
+    assert spec["hyper"] == {"mode": "exact", "beta": 2.0}
+
+
+# ---------------------------------------------------------------------------
+# Elastic restore: 1-device save → 2-device restore (the reshard path)
+# ---------------------------------------------------------------------------
+
+
+_SAVE_1DEV = textwrap.dedent("""
+    import sys, numpy as np, jax, jax.numpy as jnp
+    from repro.sketch.api import make_sketch, shard_streams, save_fleet
+    assert jax.device_count() == 1, jax.device_count()
+    out = sys.argv[1]
+    S, n, d, N = 4, 40, 6, 16
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(S, n, d)).astype(np.float32)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    fleet = shard_streams(sk, S)
+    k = n // 2
+    state = fleet.update_block(fleet.init(), jnp.asarray(X[:, :k]), ts[:k])
+    save_fleet(out + "/ckpt", fleet, state, k)
+    # uninterrupted oracle for the full stream, computed on 1 device
+    full = fleet.update_block(state, jnp.asarray(X[:, k:]), ts[k:])
+    np.save(out + "/expected.npy", np.asarray(fleet.query_rows(full, n)))
+    np.save(out + "/rows.npy", X)
+    print("SAVED")
+""")
+
+_RESTORE_2DEV = textwrap.dedent("""
+    import sys, numpy as np, jax, jax.numpy as jnp
+    from repro.sketch.api import restore_fleet
+    assert jax.device_count() == 2, jax.device_count()
+    out = sys.argv[1]
+    X = np.load(out + "/rows.npy")
+    expected = np.load(out + "/expected.npy")
+    S, n = X.shape[0], X.shape[1]
+    fc = restore_fleet(out + "/ckpt")          # resharded onto 2 devices
+    assert fc.fleet.meta["devices"] == 2
+    k = fc.t
+    assert 0 < k < n
+    ts = jnp.arange(k + 1, n + 1, dtype=jnp.int32)
+    state = fc.fleet.update_block(fc.state, jnp.asarray(X[:, k:]), ts)
+    got = np.asarray(fc.fleet.query_rows(state, n))
+    np.testing.assert_allclose(got, expected, rtol=0, atol=1e-6)
+    print("RESTORED")
+""")
+
+
+def _run_forced(script, arg, n_dev):
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+        JAX_PLATFORM_NAME="cpu",
+        PYTHONPATH=os.pathsep.join(
+            filter(None, [os.environ.get("PYTHONPATH", "")]
+                   + [os.path.join(os.path.dirname(__file__),
+                                   "..", "..", "src")])))
+    return subprocess.run([sys.executable, "-c", script, arg],
+                          capture_output=True, text=True, timeout=540,
+                          env=env)
+
+
+def test_elastic_restore_onto_more_devices_subprocess(tmp_path):
+    """Save on a forced-1-device mesh, restore on a forced-2-device mesh,
+    finish the stream — final queries match the 1-device uninterrupted
+    oracle.  Runs in subprocesses because the XLA device count is fixed at
+    import time; works both locally and under CI job 2 (which itself
+    forces 2 devices — the env override resets it per phase)."""
+    res = _run_forced(_SAVE_1DEV, str(tmp_path), 1)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "SAVED" in res.stdout
+    res = _run_forced(_RESTORE_2DEV, str(tmp_path), 2)
+    assert res.returncode == 0, res.stderr[-3000:]
+    assert "RESTORED" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Engine mid-stream kill/resume — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def _fed_engine(S, d, X, *, steps, **kw):
+    eng = SketchFleetEngine("dsfd", d=d, streams=S, eps=0.25, window=16,
+                            block=4, **kw)
+    for u in range(S):
+        for i in range(X.shape[1]):
+            eng.submit(u, X[u, i])
+    for _ in range(steps):
+        eng.step()
+    return eng
+
+
+def test_engine_mid_stream_kill_resume_query_identical(tmp_path):
+    S, d, n_rows = 4, 6, 10
+    X = _streams(S, n_rows, d, seed=9)
+
+    oracle = _fed_engine(S, d, X, steps=1)
+    victim = _fed_engine(S, d, X, steps=1)
+    assert victim.backlog > 0          # the checkpoint must carry queues
+    victim.checkpoint(str(tmp_path))
+    del victim                         # the "kill"
+
+    resumed = SketchFleetEngine.from_checkpoint(str(tmp_path))
+    assert resumed.t == oracle.t
+    assert resumed.backlog == oracle.backlog
+    assert resumed.rows_ingested == oracle.rows_ingested
+    # drain both to completion with the same tick count
+    while oracle.backlog:
+        oracle.step()
+        resumed.step()
+    assert resumed.t == oracle.t
+    for u in range(S):
+        np.testing.assert_array_equal(oracle.query_user(u),
+                                      resumed.query_user(u))
+    np.testing.assert_array_equal(oracle.query_global(),
+                                  resumed.query_global())
+
+
+def test_engine_checkpoint_of_drained_engine(tmp_path):
+    """Empty pending queues round-trip (the 0-row aux leaf edge)."""
+    S, d = 2, 4
+    X = _streams(S, 4, d, seed=1)
+    eng = _fed_engine(S, d, X, steps=1)
+    eng.run()
+    assert eng.backlog == 0
+    eng.checkpoint(str(tmp_path))
+    resumed = SketchFleetEngine.from_checkpoint(str(tmp_path))
+    assert resumed.backlog == 0
+    assert resumed.t == eng.t
+    np.testing.assert_array_equal(eng.query_global(),
+                                  resumed.query_global())
+
+
+def test_engine_rejects_bare_fleet_checkpoint(tmp_path):
+    sk = make_sketch("dsfd", d=4, eps=0.25, window=8)
+    fleet = vmap_streams(sk, 2)
+    save_fleet(str(tmp_path), fleet, fleet.init(), 0)
+    with pytest.raises(ValueError, match="no engine"):
+        SketchFleetEngine.from_checkpoint(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# run_fleet --resume path (benchmarks/common.py)
+# ---------------------------------------------------------------------------
+
+
+def test_run_fleet_ckpt_and_resume_match_uninterrupted(tmp_path):
+    from benchmarks.common import run_fleet
+
+    S, n, d, N = 4, 32, 5, 12
+    X = _streams(S, n, d, seed=4)
+    _, _, state_oracle, fleet = run_fleet("dsfd", X, eps=0.25, window=N)
+    q_oracle = np.asarray(fleet.query_rows(state_oracle, n))
+
+    _, _, state_mid, _ = run_fleet("dsfd", X, eps=0.25, window=N,
+                                   ckpt_dir=str(tmp_path))
+    np.testing.assert_array_equal(
+        q_oracle, np.asarray(fleet.query_rows(state_mid, n)))
+
+    _, _, state_res, fleet_res = run_fleet("dsfd", X, eps=0.25, window=N,
+                                           ckpt_dir=str(tmp_path),
+                                           resume=True)
+    np.testing.assert_array_equal(
+        q_oracle, np.asarray(fleet_res.query_rows(state_res, n)))
+
+    with pytest.raises(ValueError, match="needs ckpt_dir"):
+        run_fleet("dsfd", X, eps=0.25, window=N, resume=True)
+    # a resume measures the checkpoint's configuration — asking for a
+    # different one must fail loudly, not mislabel the numbers
+    with pytest.raises(ValueError, match="resume config mismatch"):
+        run_fleet("dsfd", X, eps=0.5, window=N, ckpt_dir=str(tmp_path),
+                  resume=True)
+    # ... and a layout mismatch (sharded checkpoint, vmap resume) too
+    with pytest.raises(ValueError, match="resume config mismatch"):
+        run_fleet("dsfd", X, eps=0.25, window=N, shard=False,
+                  ckpt_dir=str(tmp_path), resume=True)
