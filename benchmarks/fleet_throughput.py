@@ -1,11 +1,21 @@
-"""Fleet serving throughput: rows/sec vs fleet size.
+"""Fleet serving throughput: rows/sec vs fleet size, plus the query-plane
+aggregate benchmark.
 
 Streams S independent per-user row streams through ``shard_streams`` (the
-SPMD fleet path layered on ``vmap_streams``) and reports ingest throughput
-for fleet sizes {64, 256, 1024}, plus the latency of a cross-shard
-``merge_streams`` aggregate query and, for scale, a single-stream
-``run_sketch`` reference.  This is the ROADMAP's serving-scale axis: the
-same numbers on a TPU mesh are the hardware-saturation figure.
+SPMD fleet path layered on ``vmap_streams``) and reports, for fleet sizes
+{64, 256, 1024}:
+
+* ingest throughput (rows/sec) and a single-stream ``run_sketch``
+  reference for scale, and
+* the aggregate-query comparison — the uncached from-scratch
+  ``full_reduce_streams`` reduction vs the cached ``AggTree`` path
+  (``query_cohort``): cold build cost, warm whole-fleet latency, warm
+  random-cohort latency, and the node merges a warm cohort query spends
+  (the ≤ 2·log₂S budget).
+
+Besides the per-run CSV, writes machine-readable ``BENCH_fleet.json`` at
+the repo root so the perf trajectory is tracked across PRs; CI uploads it
+as an artifact.
 
     PYTHONPATH=src python -m benchmarks.fleet_throughput [--sizes 64 256]
 """
@@ -13,6 +23,8 @@ same numbers on a TPU mesh are the hardware-saturation figure.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 from typing import Dict, List
 
@@ -20,13 +32,77 @@ import numpy as np
 
 from benchmarks.common import run_fleet, run_sketch, write_csv
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_fleet.json")
+
+
+def _bench_aggregate(fleet, state, t, *, cohort_queries: int = 8,
+                     warm_reps: int = 5, seed: int = 0) -> Dict:
+    """Aggregate-query comparison on an ingested fleet: from-scratch
+    reduction vs the cached merge tree."""
+    import jax
+
+    from repro.sketch.api import ALL, Cohort, agg_tree, query_cohort
+    from repro.sketch.query import full_reduce_streams
+
+    S = int(fleet.meta["streams"])
+
+    # baseline: the uncached O(S) re-reduction (one compile pass first)
+    jax.block_until_ready(full_reduce_streams(fleet, state, t))
+    t0 = time.time()
+    for _ in range(warm_reps):
+        jax.block_until_ready(full_reduce_streams(fleet, state, t))
+    full_s = (time.time() - t0) / warm_reps
+
+    # cached tree: cold build (S-1 merges, amortized once).  The shared
+    # pairwise merge is compiled OUTSIDE the timed window so build_s is
+    # comparable across PRs (merge work, not XLA compile).
+    tree = agg_tree(fleet)
+    tree.compile_merge(state, t)
+    t0 = time.time()
+    jax.block_until_ready(query_cohort(fleet, state, ALL, t))
+    build_s = time.time() - t0
+
+    # ... then repeated identical whole-fleet queries — a result-memo hit
+    # by design (that IS the serving behavior for repeated aggregates);
+    # reported as memo latency, not merge work
+    t0 = time.time()
+    for _ in range(warm_reps):
+        jax.block_until_ready(query_cohort(fleet, state, ALL, t))
+    warm_all_s = (time.time() - t0) / warm_reps
+
+    # ... and warm random-cohort queries (each a fresh cohort: canonical
+    # nodes are shared, only the O(log S) composition is paid)
+    rng = np.random.default_rng(seed)
+    spans = []
+    for _ in range(cohort_queries):
+        lo = int(rng.integers(0, S - 1))
+        spans.append((lo, int(rng.integers(lo + 1, S + 1))))
+    m0 = tree.merges
+    t0 = time.time()
+    for lo, hi in spans:
+        jax.block_until_ready(
+            query_cohort(fleet, state, Cohort.range(lo, hi), t))
+    warm_cohort_s = (time.time() - t0) / cohort_queries
+    merges_per_query = (tree.merges - m0) / cohort_queries
+
+    return {
+        "full_reduce_s": full_s,
+        "tree_build_s": build_s,
+        "tree_build_merges": S - 1,
+        "warm_all_memo_s": warm_all_s,
+        "warm_cohort_query_s": warm_cohort_s,
+        "warm_cohort_merges_per_query": merges_per_query,
+        "merge_budget_2log2S": 2 * int(np.log2(S)),
+        "speedup_warm_all_memo_vs_full": full_s / max(warm_all_s, 1e-9),
+        "speedup_warm_cohort_vs_full": full_s / max(warm_cohort_s, 1e-9),
+    }
+
 
 def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
           n: int = 192, eps: float = 0.25, window: int = 64,
           seed: int = 0, shard: bool = True) -> List[Dict]:
     import jax
-
-    from repro.sketch.api import merge_streams
 
     rng = np.random.default_rng(seed)
     out: List[Dict] = []
@@ -44,18 +120,42 @@ def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
         streams /= np.linalg.norm(streams, axis=2, keepdims=True)
         rps, wall, state, fleet = run_fleet(name, streams, eps=eps,
                                             window=window, shard=shard)
-        t0 = time.time()
-        g = merge_streams(fleet, state, n)
-        jax.block_until_ready(g)
-        agg_s = time.time() - t0
+        agg = _bench_aggregate(fleet, state, n, seed=seed)
         print(f"fleet S={S:5d} on {jax.device_count()} device(s): "
-              f"{rps:12,.0f} rows/s   (ingest {wall:.3f}s, "
-              f"aggregate merge {agg_s:.3f}s)")
+              f"{rps:12,.0f} rows/s   (ingest {wall:.3f}s)")
+        print(f"  aggregate: full re-reduce {agg['full_reduce_s']*1e3:9.2f} "
+              f"ms | tree build {agg['tree_build_s']*1e3:9.2f} ms, then "
+              f"warm ALL (memo) {agg['warm_all_memo_s']*1e6:8.1f} µs "
+              f"({agg['speedup_warm_all_memo_vs_full']:,.0f}x), warm cohort "
+              f"{agg['warm_cohort_query_s']*1e3:7.2f} ms "
+              f"({agg['speedup_warm_cohort_vs_full']:,.0f}x, "
+              f"{agg['warm_cohort_merges_per_query']:.1f} merges/query ≤ "
+              f"{agg['merge_budget_2log2S']})")
         out.append({"fleet_size": S, "devices": jax.device_count(),
                     "rows_per_sec": round(rps), "ingest_wall_s": wall,
-                    "aggregate_merge_s": agg_s, "rows_per_stream": n,
-                    "d": d, "eps": eps, "window": window, "variant": name})
+                    "rows_per_stream": n, "d": d, "eps": eps,
+                    "window": window, "variant": name, **agg})
     return out
+
+
+def write_bench_json(rows: List[Dict], *, path: str = BENCH_JSON) -> str:
+    """Machine-readable perf snapshot at the repo root (the cross-PR
+    trajectory file CI uploads as an artifact)."""
+    import jax
+
+    doc = {
+        "benchmark": "fleet_throughput",
+        "schema": 1,
+        "unix_time": time.time(),
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "fleets": rows,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def resume_demo(ckpt_dir: str, *, name: str = "dsfd", S: int = 64,
@@ -114,6 +214,7 @@ def main():
                  shard=not args.no_shard)
     path = write_csv("fleet_throughput.csv", rows)
     print("wrote", path)
+    print("wrote", write_bench_json(rows))
 
 
 if __name__ == "__main__":

@@ -79,14 +79,33 @@ print(f"\nvmap_streams: {S} streams × {n_s} rows in one jitted update_block; "
       f"worst cova-err={worst:.2f} ≤ 4εN={4*eps*N_s:.0f}")
 assert worst <= 4 * eps * N_s
 
-# --- Aggregate analytics: cross-stream merge → ONE global-window sketch ----
-from repro.sketch.api import merge_streams
+# --- Aggregate analytics: the query plane (cohorts + cached merge trees) ---
+from repro.sketch.api import ALL, Cohort, agg_tree, query_cohort
 
-g = merge_streams(fleet, state, n_s)          # ⌈log₂S⌉ vmapped merge rounds
+# ONE global-window sketch over every stream.  The first call materializes
+# the fleet's AggTree (S-1 partial merges, cached); ``merge_streams`` is
+# now a deprecated alias for exactly this.
+g = query_cohort(fleet, state, ALL, n_s)
 union = streams[:, n_s - N_s:].reshape(-1, d)
 g_err = float(cova_error(jnp.asarray(union), jnp.asarray(sk_s.query(g, n_s))))
-print(f"merge_streams: global sketch over all {S} windows; "
+print(f"query_cohort(ALL): global sketch over all {S} windows; "
       f"cova-err={g_err:.2f} ≤ S·4εN={S*4*eps*N_s:.0f} (additive bound)")
 assert g_err <= S * 4 * eps * N_s
+
+# Cohorts compose by union; warm queries reuse the cached partial merges,
+# so answering "error of cohort X over its last-W rows" between ingest
+# steps costs O(log S) node merges instead of an O(S) re-reduction.
+cohort = Cohort.range(0, 16) | Cohort.of(40, 41)
+tree = agg_tree(fleet)
+m0 = tree.merges
+g_c = query_cohort(fleet, state, cohort, n_s)
+union_c = streams[list(cohort.indices(S)), n_s - N_s:].reshape(-1, d)
+c_err = float(cova_error(jnp.asarray(union_c),
+                         jnp.asarray(sk_s.query(g_c, n_s))))
+print(f"query_cohort({cohort}): {len(cohort)} streams, "
+      f"{tree.merges - m0} node merges (≤ 2·log2 S = "
+      f"{2 * int(np.log2(S))}); cova-err={c_err:.2f} ≤ "
+      f"{len(cohort) * 4 * eps * N_s:.0f}")
+assert c_err <= len(cohort) * 4 * eps * N_s
 
 print("\nall guarantees hold ✓")

@@ -1,20 +1,21 @@
 """Sliding-window PCA / drift detection — the paper's motivating
 application (§1: real-time PCA, event detection, fault monitoring).
 
-A sensor-like stream switches regime halfway through; a DS-FD sketch built
-through the unified ``SlidingSketch`` API tracks the windowed top subspace,
-and the principal-angle drift between consecutive window sketches spikes
-exactly at the change point — with O(d/ε) memory instead of buffering the
-whole window.  Swapping ``"dsfd"`` for any other registry name changes the
-sketch, not the code.
+A sensor-like stream switches regime halfway through; a DS-FD sketch
+streamed through the generic ``run_sketch`` runner (the unified
+``SlidingSketch`` registry behind one harness) tracks the windowed top
+subspace, and the principal-angle drift between consecutive window
+sketches spikes exactly at the change point — with O(d/ε) memory instead
+of buffering the whole window.  Swapping ``"dsfd"`` for any other
+registry name changes the sketch, not the code.
 
-Run:  PYTHONPATH=src python examples/streaming_pca.py
+Run:  PYTHONPATH=src:. python examples/streaming_pca.py   (from the repo root)
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.sketch.api import make_sketch
+from benchmarks.common import run_sketch
 from repro.sketch.basis import topr_basis
 
 n, d, N, eps, r = 8000, 48, 1000, 1 / 8, 3
@@ -29,19 +30,16 @@ A = np.where(np.arange(n)[:, None] < n // 2,
              coef @ U_a.T + noise, coef @ U_b.T + noise)
 A /= np.linalg.norm(A, axis=1, keepdims=True)
 
-sk = make_sketch("dsfd", d=d, eps=eps, window=N, mode="fast")
+# stream through the generic runner (one fused lax.scan with a windowed
+# query emitted every 250 rows) — the same harness every figure
+# reproduction uses; swap "dsfd" for any registry name to change sketches
+queries, peak_rows, wall_s = run_sketch("dsfd", A, eps=eps, window=N,
+                                        query_every=250, mode="fast")
 
-# absorb the stream in 250-row blocks; each block is one jitted scan, and
-# the windowed subspace is queried at every block boundary.
-state = sk.init()
-data = jnp.asarray(A)
 prev_V = None
 print("   t   top-3 window eigvals        drift vs prev window")
-for t0 in range(0, n, 250):
-    ts = jnp.arange(t0 + 1, t0 + 251, dtype=jnp.int32)
-    state = sk.update_block(state, data[t0:t0 + 250], ts)
-    t = t0 + 250
-    lam, V = topr_basis(sk.query_rows(state, t), r)
+for t, B_W in sorted(queries.items()):
+    lam, V = topr_basis(jnp.asarray(B_W), r)
     lam, V = np.asarray(lam), np.asarray(V)
     drift = np.nan
     if prev_V is not None:
@@ -52,7 +50,8 @@ for t0 in range(0, n, 250):
     prev_V = V
 
 # the window fully inside regime B must align with U_b
-lam, V = topr_basis(sk.query_rows(state, n), r)
+lam, V = topr_basis(jnp.asarray(queries[n]), r)
 overlap = np.linalg.norm(np.asarray(V) @ U_b, 2)
-print(f"\nfinal window subspace ⋅ true regime-B basis: {overlap:.3f} (→1)")
+print(f"\nfinal window subspace ⋅ true regime-B basis: {overlap:.3f} (→1)  "
+      f"[peak rows stored: {peak_rows}, {n / max(wall_s, 1e-9):,.0f} rows/s]")
 assert overlap > 0.9

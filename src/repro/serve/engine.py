@@ -153,17 +153,23 @@ class SketchFleetEngine:
     window ages out in engine ticks, exactly the time-based semantics of
     §5.
 
-    Queries:
-      * ``query_user(u)``  — that user's compressed (2ℓ, d) window sketch.
-      * ``query_global()`` — cross-shard ``merge_streams`` tree-reduction
-        to a single global-window sketch over every user's live window
-        (the aggregate-analytics path).
+    Queries (the query plane, ``repro.sketch.query``):
+      * ``query_user(u)``    — that user's compressed (2ℓ, d) window sketch.
+      * ``query_cohort(c)``  — ONE compressed sketch over any cohort of
+        users (a ``Cohort``, an iterable of user ids, or ``None`` for the
+        whole fleet), served from the engine's cached ``AggTree`` of
+        partial merges: a warm cohort query costs O(log S) node merges,
+        and ``step()`` dirties only the root-to-leaf paths of the streams
+        it actually ingested rows for, so repeated aggregate queries
+        between ticks are near-free.
+      * ``query_global()``   — ``query_cohort(None)``: the whole-fleet
+        aggregate (the old ``merge_streams`` re-reduction, now cached).
     """
 
     def __init__(self, name: str = "dsfd", *, d: int, streams: int,
                  eps: float = 1 / 8, window: int = 1024, block: int = 8,
                  mesh=None, **hyper):
-        from repro.sketch.api import make_sketch, shard_streams
+        from repro.sketch.api import agg_tree, make_sketch, shard_streams
 
         self.base = make_sketch(name, d=d, eps=eps, window=window, **hyper)
         self.fleet = shard_streams(self.base, streams, mesh)
@@ -172,6 +178,8 @@ class SketchFleetEngine:
         self.t = 0                                  # fleet clock (ticks)
         self.rows_ingested = 0
         self._pending: List[deque] = [deque() for _ in range(self.S)]
+        # the cohort-query cache, shared with the fleet's query_cohort path
+        self.tree = agg_tree(self.fleet)
 
     # -- persistence --------------------------------------------------------
 
@@ -184,7 +192,11 @@ class SketchFleetEngine:
         (or resurrect) every user's window.  Pending queues are packed
         into two flat arrays (FIFO order per user is preserved because
         users are walked in order), keeping the one-``.npy``-per-leaf
-        checkpoint format.
+        checkpoint format.  The ``AggTree``'s materialized nodes ride in
+        the same atomic checkpoint (node arrays as extra aux leaves, node
+        ranges + time tags in the JSON spec), so a restored engine's first
+        aggregate queries hit a warm cache; a node-layout mismatch at
+        restore time falls back to rebuilding the cache lazily.
         """
         from repro.sketch.api import save_fleet
 
@@ -199,12 +211,15 @@ class SketchFleetEngine:
             "pending_rows": (np.stack(rows) if rows
                              else np.zeros((0, self.d), np.float32)),
         }
+        tree_meta, tree_arrays = self.tree.state_dict(t=self.t)
+        aux.update(tree_arrays)
         # rows_ingested rides in the JSON spec (arbitrary-precision int —
         # an array leaf would be silently downcast by x64-disabled jax)
         return save_fleet(path, self.fleet, self.state, self.t, aux=aux,
                           spec_extra={"engine": {
                               "block": self.block,
-                              "rows_ingested": int(self.rows_ingested)}},
+                              "rows_ingested": int(self.rows_ingested),
+                              "agg_tree": tree_meta}},
                           keep=keep)
 
     @classmethod
@@ -217,10 +232,15 @@ class SketchFleetEngine:
         all local devices — the restore-time device count may differ from
         the save-time one as long as it divides the fleet size).  Clock,
         ingested-row counter, and pending per-user queues are realigned so
-        subsequent ``step``/``query_user``/``query_global`` calls are
-        numerically identical to an uninterrupted run.
+        subsequent ``step``/``query_user``/``query_cohort``/
+        ``query_global`` calls are numerically identical to an
+        uninterrupted run.  Materialized ``AggTree`` nodes saved by
+        :meth:`checkpoint` are re-installed so the first aggregate
+        queries after a restore are warm; any mismatch (older checkpoint
+        format, config drift) silently falls back to a cold cache — the
+        cache is an accelerator, never a correctness dependency.
         """
-        from repro.sketch.api import restore_fleet
+        from repro.sketch.api import agg_tree, restore_fleet
 
         fc = restore_fleet(path, mesh, step=step)
         ss = fc.manifest["sketch_spec"]
@@ -245,6 +265,8 @@ class SketchFleetEngine:
         eng._pending = [deque() for _ in range(eng.S)]
         for u, row in zip(fc.aux["pending_user"], fc.aux["pending_rows"]):
             eng._pending[int(u)].append(np.asarray(row, np.float32))
+        eng.tree = agg_tree(eng.fleet)
+        eng.tree.load_state_dict(espec.get("agg_tree"), fc.aux, eng.state)
         return eng
 
     # -- admission ---------------------------------------------------------
@@ -260,9 +282,15 @@ class SketchFleetEngine:
 
     def step(self) -> None:
         """One engine tick: drain ≤ ``block`` rows per user, advance the
-        whole fleet in one sharded program call."""
+        whole fleet in one sharded program call, and dirty only the
+        touched streams' root-to-leaf paths in the cohort-query cache
+        (untouched subtrees stay materialized; clock-driven expiry is
+        handled by the per-node time tags)."""
         slab = np.zeros((self.S, self.block, self.d), np.float32)
+        touched: List[int] = []
         for u, q in enumerate(self._pending):
+            if q:
+                touched.append(u)
             for b in range(min(self.block, len(q))):
                 slab[u, b] = q.popleft()
                 self.rows_ingested += 1
@@ -270,6 +298,7 @@ class SketchFleetEngine:
         self.state = self.fleet.update_block(self.state, jnp.asarray(slab),
                                              ts)
         self.t += self.block
+        self.tree.advance(self.state, touched)
 
     def run(self, max_ticks: int = 10_000) -> int:
         """Drain every pending row; returns engine ticks consumed."""
@@ -285,11 +314,30 @@ class SketchFleetEngine:
         one = jax.tree.map(lambda x: x[user], self.state)
         return np.asarray(self.base.query(one, self.t))
 
-    def query_global(self) -> np.ndarray:
-        from repro.sketch.api import merge_streams
+    def query_cohort(self, users=None) -> np.ndarray:
+        """ONE compressed (2ℓ, d) sketch over a cohort of users' windows.
 
-        g = merge_streams(self.fleet, self.state, self.t)
+        ``users``: a :class:`repro.sketch.query.Cohort`, an int, an
+        iterable of user ids, or ``None`` for the whole fleet.  Served
+        from the engine's cached ``AggTree``: the first query over a
+        region pays its node merges once, repeated/overlapping cohort
+        queries between ticks reuse them (O(log S) merges warm).
+        """
+        from repro.sketch.query import as_cohort
+
+        g = self.tree.query(self.state, as_cohort(users), self.t)
         return np.asarray(self.base.query(g, self.t))
+
+    def query_global(self) -> np.ndarray:
+        return self.query_cohort(None)
+
+    def space(self) -> Dict[str, int]:
+        """Fleet-wide live-row accounting: per-stream total + cached
+        ``AggTree`` node rows (see ``FleetSpace`` in ``sketch/api.py``)."""
+        fs = self.fleet.space(self.state)
+        return {"per_stream_total": int(np.asarray(fs.per_stream).sum()),
+                "cache_rows": int(fs.cache_rows),
+                "total": int(fs.total)}
 
 
 def _splice_caches(cfg: ModelConfig, big, one, slot: int, s_max: int):

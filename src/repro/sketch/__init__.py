@@ -3,8 +3,11 @@
 * ``api``      — the unified ``SlidingSketch`` protocol + registry: every
   sketch variant (DS-FD family and baselines) behind one
   init/update/update_block/query_rows/query/space/merge contract, with
-  ``vmap_streams`` / ``shard_streams`` / ``merge_streams`` for fleet-scale
-  serving.
+  ``vmap_streams`` / ``shard_streams`` for fleet-scale serving.
+* ``query``    — the fleet query plane: ``Cohort`` algebra (unions of
+  stream ranges) + ``AggTree`` cached merge trees; ``query_cohort``
+  answers aggregate queries over any cohort in O(log S) warm node merges
+  (``merge_streams`` is its deprecated whole-fleet alias).
 * ``monitor``  — SlidingGradSketch: windowed streaming PCA of gradients.
 * ``compress`` — FD low-rank gradient compression with error feedback for
   the cross-pod all-reduce.
@@ -12,8 +15,9 @@
   curvature forgetting).
 """
 
-from repro.sketch.api import SlidingSketch, available_sketches, \
-    make_sketch, merge_streams, register, shard_streams, \
+from repro.sketch.api import ALL, AggTree, Cohort, FleetSpace, \
+    SlidingSketch, agg_tree, available_sketches, make_sketch, \
+    merge_streams, query_cohort, register, shard_streams, \
     vmap_streams                                                # noqa: F401
 from repro.sketch.monitor import SketchConfig, sketch_init, sketch_update, \
     sketch_query, subspace_drift                                # noqa: F401

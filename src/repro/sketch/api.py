@@ -52,9 +52,13 @@ into one XLA program on one device; ``shard_streams(sk, S, mesh)`` lays the
 same fleet out over every device of a mesh via ``shard_map`` (S must divide
 by the device count), so S × n_devices-scale fleets update as one SPMD
 program with zero cross-device traffic on the hot path.  Aggregate queries
-come from ``merge_streams(fleet, state, t)``, which tree-reduces the fleet
-with vmapped pairwise ``merge`` calls (⌈log₂S⌉ rounds) down to a single
-global-window sketch of the base variant — the cross-shard merge path.
+go through the **query plane** (``repro.sketch.query``):
+``query_cohort(fleet, state, cohort, t)`` answers any union of stream
+ranges (a ``Cohort``) with ONE merged base-variant sketch, served from the
+fleet's cached ``AggTree`` — a segment tree of partial merges whose warm
+queries cost O(log S) node merges instead of the O(S) from-scratch
+reduction.  ``merge_streams(fleet, state, t)`` survives as a deprecated
+alias for ``query_cohort(fleet, state, ALL, t)``.
 
 Registry::
 
@@ -69,7 +73,7 @@ construction re-uses the same jitted ``update_block``.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -82,6 +86,8 @@ from repro.core.fd import fd_compress, fd_init, fd_merge, fd_update
 from repro.core.seq_dsfd import (layered_init, layered_merge,
                                  layered_query_rows, layered_update,
                                  make_seq_config, make_time_config)
+from repro.sketch.query import ALL, AggTree, Cohort, as_cohort  # noqa: F401
+from repro.sketch.query import full_reduce_streams              # noqa: F401
 
 
 class SlidingSketch(NamedTuple):
@@ -91,6 +97,12 @@ class SlidingSketch(NamedTuple):
     merge`` are the protocol (see module docstring); ``meta`` carries static
     facts about the instance (``d``, ``eps``, ``window``, ``ell``,
     ``backend``: ``"jax"`` | ``"host"``) for harnesses that need them.
+
+    ``query_cohort(state, cohort, t)`` is the query-plane entry point —
+    it answers aggregate queries over any :class:`repro.sketch.query.Cohort`
+    of streams from the fleet's cached :class:`AggTree`.  Only fleets
+    (``vmap_streams`` / ``shard_streams``) implement it; single sketches
+    carry a raiser explaining how to get one.
     """
 
     name: str
@@ -102,6 +114,19 @@ class SlidingSketch(NamedTuple):
     query: Callable[..., Any]
     space: Callable[[Any], Any]
     merge: Callable[..., Any]
+    query_cohort: Optional[Callable[..., Any]] = None
+
+
+class FleetSpace(NamedTuple):
+    """Fleet space accounting: ``per_stream`` is the ``(S,)`` vector of
+    per-stream live-row counts (what the pre-query-plane fleet ``space``
+    returned), ``cache_rows`` the rows held by the fleet's materialized
+    ``AggTree`` nodes, and ``total`` the fleet-wide footprint
+    ``per_stream.sum() + cache_rows``."""
+
+    per_stream: Any
+    total: Any
+    cache_rows: int
 
 
 _REGISTRY: Dict[str, Callable[..., SlidingSketch]] = {}
@@ -159,6 +184,15 @@ def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
     if cached is not None:
         return _copy_meta(cached)
     sk = _REGISTRY[name](int(d), float(eps), int(window), **hyper)
+    if sk.query_cohort is None:
+
+        def _no_cohort(state, cohort=None, t=None, *, _name=name):
+            raise ValueError(
+                f"{_name!r} is a single sketch — cohort queries need a "
+                "fleet: lift it with vmap_streams/shard_streams, then call "
+                "query_cohort(state, cohort, t)")
+
+        sk = sk._replace(query_cohort=_no_cohort)
     sk.meta["spec"] = {"name": name, "d": int(d), "eps": float(eps),
                        "window": int(window), "hyper": dict(hyper)}
     if key is not None:
@@ -461,51 +495,90 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
     def merge(s1, s2, t=None):
         return jax.vmap(lambda a, b: sk.merge(a, b, t))(s1, s2)
 
+    # the fleet's query plane: one AggTree shared by every query_cohort
+    # call on this fleet (and by shard_streams fleets built on it), created
+    # lazily so fleets that never issue aggregate queries pay nothing
+    agg_box: Dict[str, Any] = {}
+
+    def query_cohort(state, cohort=ALL, t=None):
+        tree = agg_box.get("tree")
+        if tree is None:
+            tree = agg_box["tree"] = AggTree(sk, S)
+        return tree.query(state, cohort, t)
+
+    v_space = jax.vmap(sk.space)
+
+    def space(state):
+        per = v_space(state)
+        tree = agg_box.get("tree")
+        cache_rows = 0 if tree is None else tree.space()
+        return FleetSpace(per_stream=per,
+                          total=jnp.sum(per) + cache_rows,
+                          cache_rows=cache_rows)
+
     return SlidingSketch(
         name=f"vmap[{sk.name}x{S}]",
-        meta=dict(sk.meta, streams=S, base=sk),
+        meta=dict(sk.meta, streams=S, base=sk, agg_box=agg_box),
         init=init,
         update=update,
         update_block=update_block,
         query_rows=query_rows,
         query=query,
-        space=jax.vmap(sk.space),
+        space=space,
         merge=merge,
+        query_cohort=query_cohort,
     )
 
 
-def merge_streams(fleet: SlidingSketch, state, t=None):
-    """Cross-stream merge: reduce a fleet state to ONE global-window sketch.
+def query_cohort(fleet: SlidingSketch, state, cohort=ALL, t=None):
+    """Aggregate query over a :class:`Cohort` of a fleet's streams.
 
-    ``fleet`` must come from ``vmap_streams`` / ``shard_streams``; the
-    returned state belongs to the *base* variant (``fleet.meta["base"]``)
-    and answers aggregate queries over the union of every stream's window.
-    The reduction is a binary tree of vmapped pairwise ``merge`` calls —
-    ⌈log₂S⌉ rounds, each one XLA program over half the surviving streams —
-    so a million-stream fleet needs 20 rounds, not a million sequential
-    merges.  Under a sharded fleet the tree's upper rounds cross shard
-    boundaries; jit inserts the collectives automatically.
+    Returns ONE merged base-variant state covering the union of the
+    cohort's per-stream windows at query time ``t`` — compress it with
+    ``fleet.meta["base"].query(g, t)``.  Answers come from the fleet's
+    cached :class:`AggTree` (segment tree of partial merges, pad-free for
+    any fleet size): the first query over a region materializes its
+    canonical nodes once; every later query over any overlapping cohort
+    at the same clock reuses them, so a warm query costs O(log S) node
+    merges instead of the O(S) from-scratch reduction.
+
+    ``cohort`` composes via union: ``Cohort.range(0, 64) | Cohort.of(80)``.
+    Pass :data:`ALL` (the default) for the whole-fleet aggregate.
     """
-    base = fleet.meta.get("base")
-    if base is None:
+    if fleet.query_cohort is None or fleet.meta.get("base") is None:
         raise ValueError(
-            f"merge_streams needs a fleet from vmap_streams/shard_streams, "
+            f"query_cohort needs a fleet from vmap_streams/shard_streams, "
             f"got {fleet.name!r}")
-    n = int(fleet.meta["streams"])
-    vmerge = jax.vmap(lambda a, b: base.merge(a, b, t))
-    while n > 1:
-        half = n // 2
-        a = jax.tree.map(lambda x: x[:half], state)
-        b = jax.tree.map(lambda x: x[half:2 * half], state)
-        merged = vmerge(a, b)
-        if n % 2:                   # odd stream count: carry the last one
-            tail = jax.tree.map(lambda x: x[2 * half:n], state)
-            state = jax.tree.map(
-                lambda m, z: jnp.concatenate([m, z], axis=0), merged, tail)
-            n = half + 1
-        else:
-            state, n = merged, half
-    return jax.tree.map(lambda x: x[0], state)
+    return fleet.query_cohort(state, cohort, t)
+
+
+def agg_tree(fleet: SlidingSketch) -> AggTree:
+    """The fleet's shared :class:`AggTree` (created lazily on first use) —
+    for cache accounting, targeted ``advance``/``dirty`` invalidation, and
+    checkpoint persistence of materialized nodes."""
+    box = fleet.meta.get("agg_box")
+    if box is None:
+        raise ValueError(
+            f"agg_tree needs a fleet from vmap_streams/shard_streams, "
+            f"got {fleet.name!r}")
+    tree = box.get("tree")
+    if tree is None:
+        tree = box["tree"] = AggTree(fleet.meta["base"],
+                                     int(fleet.meta["streams"]))
+    return tree
+
+
+def merge_streams(fleet: SlidingSketch, state, t=None):
+    """Deprecated alias: the whole-fleet aggregate is now
+    ``query_cohort(fleet, state, ALL, t)`` — same merged base-variant
+    state, but served from the fleet's cached :class:`AggTree` (repeated
+    calls between ingests are near-free) instead of an O(S) re-reduction
+    per call.  The uncached from-scratch reduction survives as
+    :func:`repro.sketch.query.full_reduce_streams` (the benchmark
+    baseline).  Kept for import compatibility; new code should call
+    :func:`query_cohort`.
+    """
+    return query_cohort(fleet, state, ALL, t)
 
 
 def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
@@ -562,7 +635,7 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
     return SlidingSketch(
         name=f"shard[{sk.name}x{S}/{ndev}]",
         meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev,
-                  axis=axis),
+                  axis=axis, agg_box=fleet.meta["agg_box"]),
         init=init,
         update=fleet.update,
         update_block=update_block,
@@ -570,6 +643,7 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         query=fleet.query,
         space=fleet.space,
         merge=fleet.merge,
+        query_cohort=fleet.query_cohort,
     )
 
 

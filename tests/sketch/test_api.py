@@ -116,8 +116,10 @@ def test_vmap_streams_matches_sequential():
     state = fleet.update_block(fleet.init(), jnp.asarray(streams), ts)
 
     rows_v = np.asarray(fleet.query_rows(state, n))       # (S, cap+m, d)
-    space_v = np.asarray(fleet.space(state))
+    fs = fleet.space(state)                    # FleetSpace accounting
+    space_v = np.asarray(fs.per_stream)
     assert rows_v.shape[0] == S and space_v.shape == (S,)
+    assert int(fs.total) == int(space_v.sum()) + fs.cache_rows
 
     for s in range(0, S, 13):                  # spot-check a handful
         st_s = sk.update_block(sk.init(), jnp.asarray(streams[s]), ts)

@@ -251,6 +251,57 @@ def test_engine_rejects_bare_fleet_checkpoint(tmp_path):
         SketchFleetEngine.from_checkpoint(str(tmp_path))
 
 
+def test_engine_checkpoint_persists_warm_agg_tree(tmp_path):
+    """A checkpoint taken after aggregate queries carries the AggTree's
+    materialized nodes: the restored engine answers the same cohort
+    queries bit-identically WITHOUT re-merging (warm cache on restore)."""
+    from repro.sketch.query import Cohort
+
+    S, d = 6, 5
+    X = _streams(S, 8, d, seed=21)
+    eng = _fed_engine(S, d, X, steps=2)
+    q_global = eng.query_global()
+    q_cohort = eng.query_cohort(Cohort.range(1, 5))
+    assert eng.tree.cached_nodes > 0
+    eng.checkpoint(str(tmp_path))
+
+    res = SketchFleetEngine.from_checkpoint(str(tmp_path))
+    assert res.tree.cached_nodes == eng.tree.cached_nodes
+    np.testing.assert_array_equal(res.query_global(), q_global)
+    assert res.tree.merges == 0, \
+        f"restored engine re-merged {res.tree.merges} nodes (cache cold)"
+    # cohort composition re-merges cached canonical nodes only: O(log S),
+    # never a from-scratch rebuild
+    np.testing.assert_array_equal(res.query_cohort(Cohort.range(1, 5)),
+                                  q_cohort)
+    assert res.tree.merges <= 2 * int(np.log2(S)) + 1
+
+
+def test_engine_restore_pre_query_plane_checkpoint(tmp_path):
+    """Checkpoints written before the query plane existed (no ``agg_tree``
+    section, no node aux leaves) still restore — the cache just starts
+    cold (rebuild-on-mismatch fallback)."""
+    S, d = 4, 5
+    X = _streams(S, 6, d, seed=3)
+    eng = _fed_engine(S, d, X, steps=1)
+    # simulate the PR-3 on-disk format: same fleet/queues, no tree section
+    users, rows = [], []
+    for u, q in enumerate(eng._pending):
+        for r in q:
+            users.append(u)
+            rows.append(np.asarray(r, np.float32))
+    save_fleet(str(tmp_path), eng.fleet, eng.state, eng.t,
+               aux={"pending_user": np.asarray(users, np.int32),
+                    "pending_rows": (np.stack(rows) if rows else
+                                     np.zeros((0, d), np.float32))},
+               spec_extra={"engine": {
+                   "block": eng.block,
+                   "rows_ingested": int(eng.rows_ingested)}})
+    res = SketchFleetEngine.from_checkpoint(str(tmp_path))
+    assert res.tree.cached_nodes == 0
+    np.testing.assert_array_equal(res.query_global(), eng.query_global())
+
+
 # ---------------------------------------------------------------------------
 # run_fleet --resume path (benchmarks/common.py)
 # ---------------------------------------------------------------------------

@@ -252,3 +252,36 @@ def test_merge(name):
     err = _spec_err2(union, q)
     assert err <= budget * (1 + 1e-3) + 1e-6, \
         f"{name}: merged err {err:.4f} > additive budget {budget:.4f}"
+
+
+def test_fleet_space_bounds_per_stream_and_total():
+    """Fleet ``space`` reports BOTH per-stream live rows and the fleet
+    total (+ AggTree cache rows), and every term obeys the stated bounds:
+    per-stream ≤ the variant's ceiling, total = Σ per-stream + cache, and
+    cached nodes (compressed merges) ≤ 2ℓ rows each — for a
+    non-power-of-two fleet, so the pad-free tree is what's measured."""
+    from repro.sketch.api import ALL, make_sketch, query_cohort, vmap_streams
+
+    S, n = 6, 3 * CHUNK
+    sk = make_sketch("dsfd", d=D, eps=EPS, window=WINDOW)
+    fleet = vmap_streams(sk, S)
+    rng = np.random.default_rng(13)
+    X = rng.normal(size=(S, n, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
+
+    cfg = sk.meta["cfg"]
+    bound = 2 * (cfg.cap + cfg.m)              # the dsfd per-stream ceiling
+    sp = fleet.space(state)
+    per = np.asarray(sp.per_stream)
+    assert per.shape == (S,)
+    assert per.max() <= bound
+    assert sp.cache_rows == 0
+    assert int(sp.total) == int(per.sum())
+
+    query_cohort(fleet, state, ALL, n)         # materialize the merge tree
+    sp2 = fleet.space(state)
+    assert 0 < sp2.cache_rows <= (S - 1) * 2 * sk.meta["ell"]
+    assert int(sp2.total) == int(np.asarray(sp2.per_stream).sum()) \
+        + sp2.cache_rows

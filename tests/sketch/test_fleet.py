@@ -42,7 +42,9 @@ def test_shard_streams_matches_sequential_reference():
     assert sh.meta["devices"] == jax.device_count()
     state = sh.update_block(sh.init(), jnp.asarray(X), ts)
     rows_v = np.asarray(sh.query_rows(state, n))
-    space_v = np.asarray(sh.space(state))
+    fs = sh.space(state)                      # FleetSpace: per-stream + total
+    space_v = np.asarray(fs.per_stream)
+    assert int(fs.total) == int(space_v.sum()) + fs.cache_rows
     for s in range(S):
         st_s = sk.update_block(sk.init(), jnp.asarray(X[s]), ts)
         np.testing.assert_allclose(
