@@ -112,13 +112,13 @@ def run_sketch(name: str, rows: np.ndarray, *, eps: float, window: int,
     if sk.meta["backend"] == "host":
         state = sk.init()
         queries, peak = {}, 0
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i in range(n):
             state = sk.update(state, rows[i], int(ts_np[i]))
             peak = max(peak, int(sk.space(state)))
             if (i + 1) % query_every == 0:
                 queries[i + 1] = np.asarray(sk.query_rows(state, ts_np[i]))
-        return queries, peak, time.time() - t0
+        return queries, peak, time.perf_counter() - t0
 
     import jax
     import jax.numpy as jnp
@@ -143,12 +143,12 @@ def run_sketch(name: str, rows: np.ndarray, *, eps: float, window: int,
         return jax.lax.scan(
             step, (state, jnp.zeros((), jnp.int32)), (ts, data))[1]
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     outs, live = scan_all(state0, jnp.asarray(rows, jnp.float32),
                           jnp.asarray(ts_np, jnp.int32), query_every)
     outs = np.asarray(outs)
     live = np.asarray(live)
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     queries = {i + 1: outs[i] for i in range(n) if (i + 1) % query_every == 0}
     return queries, int(live.max()), wall
 
@@ -202,13 +202,13 @@ def run_fleet(name: str, streams_rows: np.ndarray, *, eps: float,
             jax.block_until_ready(
                 fleet.update_block(fleet.init(), rows, ts))
         state = start_state
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i, (rows, ts) in enumerate(segments):
             state = fleet.update_block(state, rows, ts)
             if on_segment is not None:
                 on_segment(i, state)
         jax.block_until_ready(state)
-        return state, time.time() - t0
+        return state, time.perf_counter() - t0
 
     ts_all = jnp.arange(1, n + 1, dtype=jnp.int32)
 
@@ -311,14 +311,14 @@ def run_baseline(alg, rows: np.ndarray, *, query_every: int,
     n = rows.shape[0]
     queries = {}
     peak = 0
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(n):
         t = int(timestamps[i]) if timestamps is not None else i + 1
         alg.update(rows[i], t)
         peak = max(peak, alg.n_rows_stored)
         if (i + 1) % query_every == 0:
             queries[i + 1] = alg.query()
-    return queries, peak, time.time() - t0
+    return queries, peak, time.perf_counter() - t0
 
 
 def eval_queries(oracle: WindowOracle, queries: Dict[int, np.ndarray],

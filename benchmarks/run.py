@@ -24,7 +24,7 @@ def main(argv=None) -> None:
     t_scale = 1.0 if args.full else 0.04
     sections = args.sections or ["error_space", "space_growth", "timing",
                                  "roofline"]
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     if "error_space" in sections:
         from benchmarks.error_space import sweep
@@ -65,7 +65,7 @@ def main(argv=None) -> None:
         except Exception as e:   # noqa: BLE001
             print("  (no dry-run artifacts yet:", e, ")")
 
-    print(f"benchmarks done in {time.time()-t0:.0f}s")
+    print(f"benchmarks done in {time.perf_counter()-t0:.0f}s")
 
 
 if __name__ == "__main__":

@@ -37,17 +37,17 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
     for name, reg, hyper in host:
         sk = make_sketch(reg, d=spec.d, eps=eps, window=N, **hyper)
         st = sk.init()
-        t0 = time.time()
+        t0 = time.perf_counter()
         tq = 0.0
         nq = 0
         for i in range(n):
             st = sk.update(st, rows[i], i + 1)
             if (i + 1) % q == 0:
-                tq0 = time.time()
+                tq0 = time.perf_counter()
                 sk.query_rows(st, i + 1)
-                tq += time.time() - tq0
+                tq += time.perf_counter() - tq0
                 nq += 1
-        wall = time.time() - t0 - tq
+        wall = time.perf_counter() - t0 - tq
         out.append({"alg": name, "update_ms": 1e3 * wall / n,
                     "query_ms": 1e3 * tq / max(nq, 1)})
 
@@ -60,17 +60,17 @@ def bench(dataset: str = "bibd", *, scale: float = 0.03, eps: float = 0.01,
     st = step(st, data[0], 1)  # compile
     jax.block_until_ready(st)
     query(st, 1)
-    t0 = time.time()
+    t0 = time.perf_counter()
     m = min(len(data), 4000)
     for i in range(1, m):
         st = step(st, data[i], i + 1)
     jax.block_until_ready(st)
-    upd_ms = 1e3 * (time.time() - t0) / (m - 1)
-    t0 = time.time()
+    upd_ms = 1e3 * (time.perf_counter() - t0) / (m - 1)
+    t0 = time.perf_counter()
     for _ in range(max(n_queries, 5)):
         b = query(st, m)
     jax.block_until_ready(b)
-    q_ms = 1e3 * (time.time() - t0) / max(n_queries, 5)
+    q_ms = 1e3 * (time.perf_counter() - t0) / max(n_queries, 5)
     out.append({"alg": "DS-FD(step)", "update_ms": upd_ms,
                 "query_ms": q_ms})
 

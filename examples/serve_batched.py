@@ -21,7 +21,7 @@ eng = ServeEngine(cfg, params,
                   EngineConfig(slots=4, s_max=96, prefill_buckets=(16, 32)))
 
 rng = np.random.default_rng(0)
-t0 = time.time()
+t0 = time.perf_counter()
 for uid in range(16):
     plen = int(rng.integers(3, 30))
     eng.submit(Request(uid=uid,
@@ -29,7 +29,7 @@ for uid in range(16):
                                            plen).astype(np.int32),
                        max_new=int(rng.integers(4, 12))))
 done = eng.run()
-dt = time.time() - t0
+dt = time.perf_counter() - t0
 
 toks = sum(len(r.out_tokens) for r in done.values())
 lat = sorted(r.latency_s for r in done.values())

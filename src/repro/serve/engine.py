@@ -13,13 +13,17 @@ Two serving paths live here:
 * ``SketchFleetEngine`` — the fleet-backed sketch serving path: S per-user
   sliding-window sketches advanced as ONE SPMD program
   (``shard_streams``), with per-user queries and cross-shard ``merge``
-  aggregation for global-window queries.
+  aggregation for global-window queries.  Rows are admitted through the
+  ingest subsystem (``repro.serve.ingest``): a bounded, validating
+  admission queue feeding a double-buffered slab pipeline that packs and
+  prefetches slab k+1 while the device consumes slab k.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -83,7 +87,7 @@ class ServeEngine:
                 f"prefill bucket ({b_max}); admitting it would silently "
                 f"drop all but the last {b_max} tokens — chunk the prompt "
                 "or enlarge EngineConfig.prefill_buckets")
-        req.t_submit = time.time()
+        req.t_submit = time.perf_counter()   # latency base: monotonic
         req.out_tokens = []
         self.queue.append(req)
 
@@ -130,14 +134,24 @@ class ServeEngine:
             self.slot_left[s] -= 1
             hit_eos = req.eos_id is not None and toks[s] == req.eos_id
             if self.slot_left[s] <= 0 or hit_eos:
-                req.latency_s = time.time() - req.t_submit
+                req.latency_s = time.perf_counter() - req.t_submit
                 self.done[req.uid] = req
                 self.slot_req[s] = None
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        # budget THIS call, not the engine's lifetime: self.ticks is
+        # cumulative, so comparing it to max_ticks would make run() a
+        # permanent no-op once a long-lived engine crosses the budget
+        t0 = self.ticks
         while (self.queue or any(r is not None for r in self.slot_req)) \
-                and self.ticks < max_ticks:
+                and self.ticks - t0 < max_ticks:
             self.step()
+        left = len(self.queue) + sum(r is not None for r in self.slot_req)
+        if left:
+            warnings.warn(
+                f"ServeEngine.run() exhausted max_ticks={max_ticks} with "
+                f"{left} request(s) unfinished — `done` is incomplete",
+                RuntimeWarning, stacklevel=2)
         return self.done
 
 
@@ -145,13 +159,27 @@ class SketchFleetEngine:
     """Fleet-backed sketch serving: S per-user sketches, one SPMD program.
 
     Ingestion is tick-batched to keep shapes static: ``submit(user, row)``
-    buffers rows per user; each ``step()`` assembles a fixed ``(S, block,
-    d)`` slab — users with nothing queued contribute zero rows, which the
-    DS-FD family treats as idle ticks (expiry/swap advance, nothing is
-    absorbed) — and advances every stream with one sharded
-    ``update_block``.  The fleet runs one shared clock, so an idle user's
-    window ages out in engine ticks, exactly the time-based semantics of
-    §5.
+    admits rows through a validating, optionally capacity-bounded
+    ``AdmissionQueue`` (``repro.serve.ingest``) — it returns ``True``
+    (accepted) or ``False`` (deferred: queue at ``queue_capacity``);
+    malformed input raises at admission.  Each ``step()`` takes a fixed
+    ``(S, block, d)`` slab from the ingest pipeline — users with nothing
+    queued contribute zero rows, which the DS-FD family treats as idle
+    ticks (expiry/swap advance, nothing is absorbed) — and advances every
+    stream with one sharded ``update_block``.  With the default
+    ``ingest="async"`` pipeline the slab for tick k+1 is packed into a
+    spare host buffer and prefetched onto the fleet mesh *while the
+    device consumes tick k's slab* (double buffering); ``ingest="sync"``
+    keeps the legacy assemble-at-dispatch path.  Both are bit-identical
+    for the same submit/step interleaving (the tick/clock contract in
+    ``repro.serve.ingest``).
+
+    The fleet runs one shared clock, so an idle user's window ages out in
+    engine ticks, exactly the time-based semantics of §5 — but a tick in
+    which NO user has pending rows is clock-neutral by default (a no-op:
+    polling ``step()`` on an idle engine no longer silently expires live
+    window content).  Wall-clock-driven time-based deployments that want
+    idle ticks to age windows out opt in with ``step(advance_time=True)``.
 
     Queries (the query plane, ``repro.sketch.query``):
       * ``query_user(u)``    — that user's compressed (2ℓ, d) window sketch.
@@ -168,7 +196,8 @@ class SketchFleetEngine:
 
     def __init__(self, name: str = "dsfd", *, d: int, streams: int,
                  eps: float = 1 / 8, window: int = 1024, block: int = 8,
-                 mesh=None, **hyper):
+                 mesh=None, ingest: str = "async",
+                 queue_capacity: Optional[int] = None, **hyper):
         from repro.sketch.api import agg_tree, make_sketch, shard_streams
 
         self.base = make_sketch(name, d=d, eps=eps, window=window, **hyper)
@@ -177,9 +206,37 @@ class SketchFleetEngine:
         self.state = self.fleet.init()
         self.t = 0                                  # fleet clock (ticks)
         self.rows_ingested = 0
-        self._pending: List[deque] = [deque() for _ in range(self.S)]
+        self._wire_ingest(ingest, queue_capacity)
         # the cohort-query cache, shared with the fleet's query_cohort path
         self.tree = agg_tree(self.fleet)
+
+    def _wire_ingest(self, mode: str,
+                     capacity: Optional[int]) -> None:
+        """Build the admission queue + slab pipeline for this fleet
+        (also the restore path: ``from_checkpoint`` rewires the same
+        way, so pending rows always live in one structure)."""
+        from repro.serve.ingest import AdmissionQueue, make_pipeline
+
+        sharding = self.fleet.meta.get("slab_sharding")
+        put = (jax.device_put if sharding is None
+               else (lambda slab: jax.device_put(slab, sharding)))
+        self.ingest = mode
+        self.queue = AdmissionQueue(self.S, self.d, capacity=capacity)
+        self.pipe = make_pipeline(mode, self.queue, block=self.block,
+                                  put=put)
+        self._zero_slab = None         # lazy zero slab for idle ticks
+        self.last_dispatch_s = 0.0     # admission-to-device latency
+
+    @property
+    def _pending(self) -> List[deque]:
+        """Back-compat snapshot of every admitted-but-not-ingested row
+        per user — rows staged in the async pipeline come first (they
+        dispatch next), then the queued rows behind them.  Read-only:
+        mutate through ``submit``/``step``, not this."""
+        qs = [deque(q) for q in self.queue.queues]
+        for u, rows in self.pipe.staged_snapshot():
+            qs[u].extendleft(reversed(rows))
+        return qs
 
     # -- persistence --------------------------------------------------------
 
@@ -189,10 +246,13 @@ class SketchFleetEngine:
 
         The window is defined by the clock, so the clock is part of the
         state: a restore that did not realign ``t`` would silently expire
-        (or resurrect) every user's window.  Pending queues are packed
-        into two flat arrays (FIFO order per user is preserved because
-        users are walked in order), keeping the one-``.npy``-per-leaf
-        checkpoint format.  The ``AggTree``'s materialized nodes ride in
+        (or resurrect) every user's window.  Rows staged by the async
+        pipeline are first unwound back to the queue front
+        (``flush_to_queue``), then the queue is packed into two flat
+        arrays (FIFO order per user is preserved because users are
+        walked in order) — the one-``.npy``-per-leaf checkpoint format
+        is pipeline-agnostic and identical to the pre-ingest-subsystem
+        layout.  The ``AggTree``'s materialized nodes ride in
         the same atomic checkpoint (node arrays as extra aux leaves, node
         ranges + time tags in the JSON spec), so a restored engine's first
         aggregate queries hit a warm cache; a node-layout mismatch at
@@ -200,17 +260,9 @@ class SketchFleetEngine:
         """
         from repro.sketch.api import save_fleet
 
-        users: List[int] = []
-        rows: List[np.ndarray] = []
-        for u, q in enumerate(self._pending):
-            for r in q:
-                users.append(u)
-                rows.append(np.asarray(r, np.float32))
-        aux = {
-            "pending_user": np.asarray(users, np.int32),
-            "pending_rows": (np.stack(rows) if rows
-                             else np.zeros((0, self.d), np.float32)),
-        }
+        self.pipe.flush_to_queue()
+        users, rows = self.queue.snapshot()
+        aux = {"pending_user": users, "pending_rows": rows}
         tree_meta, tree_arrays = self.tree.state_dict(t=self.t)
         aux.update(tree_arrays)
         # rows_ingested rides in the JSON spec (arbitrary-precision int —
@@ -219,6 +271,8 @@ class SketchFleetEngine:
                           spec_extra={"engine": {
                               "block": self.block,
                               "rows_ingested": int(self.rows_ingested),
+                              "ingest": self.ingest,
+                              "queue_capacity": self.queue.capacity,
                               "agg_tree": tree_meta}},
                           keep=keep)
 
@@ -262,50 +316,93 @@ class SketchFleetEngine:
         eng.state = fc.state
         eng.t = int(fc.t)
         eng.rows_ingested = int(espec.get("rows_ingested", 0))
-        eng._pending = [deque() for _ in range(eng.S)]
-        for u, row in zip(fc.aux["pending_user"], fc.aux["pending_rows"]):
-            eng._pending[int(u)].append(np.asarray(row, np.float32))
+        # pre-ingest-subsystem checkpoints carry no ingest section:
+        # default to the async pipeline, unbounded queue (bit-identical
+        # either way — the pipeline is not part of the persisted state)
+        eng._wire_ingest(espec.get("ingest", "async"),
+                         espec.get("queue_capacity"))
+        eng.queue.load(fc.aux["pending_user"], fc.aux["pending_rows"])
         eng.tree = agg_tree(eng.fleet)
         eng.tree.load_state_dict(espec.get("agg_tree"), fc.aux, eng.state)
         return eng
 
     # -- admission ---------------------------------------------------------
 
-    def submit(self, user: int, row: np.ndarray) -> None:
-        self._pending[user].append(np.asarray(row, np.float32))
+    def submit(self, user: int, row: np.ndarray) -> bool:
+        """Admit one row for ``user``; validated at admission (clear
+        ``ValueError`` instead of a late XLA shape error).  Returns
+        ``True`` (accepted) or ``False`` (deferred — the queue is at
+        ``queue_capacity``; drain with ``step``/``run`` and resubmit)."""
+        return self.queue.submit(user, row)
 
     @property
     def backlog(self) -> int:
-        return sum(len(q) for q in self._pending)
+        """Admitted-but-not-ingested rows: queued + staged in the async
+        pipeline's prefetched slab."""
+        return self.queue.backlog + self.pipe.staged_rows
 
     # -- main loop ---------------------------------------------------------
 
-    def step(self) -> None:
-        """One engine tick: drain ≤ ``block`` rows per user, advance the
-        whole fleet in one sharded program call, and dirty only the
-        touched streams' root-to-leaf paths in the cohort-query cache
-        (untouched subtrees stay materialized; clock-driven expiry is
-        handled by the per-node time tags)."""
-        slab = np.zeros((self.S, self.block, self.d), np.float32)
-        touched: List[int] = []
-        for u, q in enumerate(self._pending):
-            if q:
-                touched.append(u)
-            for b in range(min(self.block, len(q))):
-                slab[u, b] = q.popleft()
-                self.rows_ingested += 1
-        ts = jnp.arange(self.t + 1, self.t + self.block + 1, dtype=jnp.int32)
-        self.state = self.fleet.update_block(self.state, jnp.asarray(slab),
-                                             ts)
-        self.t += self.block
-        self.tree.advance(self.state, touched)
+    def step(self, *, advance_time: bool = False) -> int:
+        """One engine tick: take the next ≤ ``block``-rows-per-user slab
+        from the ingest pipeline, advance the whole fleet in one sharded
+        program call, and dirty only the touched streams' root-to-leaf
+        paths in the cohort-query cache (untouched subtrees stay
+        materialized; clock-driven expiry is handled by the per-node
+        time tags).  Returns the number of rows ingested this tick.
 
-    def run(self, max_ticks: int = 10_000) -> int:
-        """Drain every pending row; returns engine ticks consumed."""
+        A tick where NO user has pending rows is clock-neutral (a
+        no-op) unless ``advance_time=True`` — polling an idle engine
+        must not silently expire live window content; wall-clock-driven
+        time-based windows opt in to idle aging explicitly.
+        """
+        t_enter = time.perf_counter()
+        slab, touched, nrows = self.pipe.next_slab()
+        if nrows == 0 and not advance_time:
+            self.last_dispatch_s = 0.0     # idle: nothing was dispatched
+            return 0
+        if nrows == 0:
+            if self._zero_slab is None:
+                self._zero_slab = np.zeros((self.S, self.block, self.d),
+                                           np.float32)
+            slab = self._zero_slab
+        ts = jnp.arange(self.t + 1, self.t + self.block + 1, dtype=jnp.int32)
+        self.state = self.fleet.update_block(self.state, slab, ts)
+        # admission-to-device latency of this tick (prefetched slabs make
+        # this ~the bare dispatch — the async pipeline's serving win)
+        self.last_dispatch_s = time.perf_counter() - t_enter
+        self.t += self.block
+        self.rows_ingested += nrows
+        self.tree.advance(self.state, touched)
+        # double buffering: pack + prefetch the NEXT slab while the
+        # device consumes the one just dispatched (no-op for sync)
+        self.pipe.after_dispatch()
+        return nrows
+
+    def run(self, max_ticks: int = 10_000, *,
+            on_budget: str = "raise") -> int:
+        """Drain every pending row; returns engine ticks consumed.
+
+        If ``max_ticks`` is exhausted with rows still pending the drain
+        did NOT complete: raises :class:`IngestBacklogError` (carrying
+        ``.remaining``) by default, or warns and returns the ticks spent
+        with ``on_budget="warn"`` (check ``self.backlog``)."""
+        from repro.serve.ingest import IngestBacklogError
+
+        if on_budget not in ("raise", "warn"):
+            raise ValueError(
+                f"on_budget must be 'raise' or 'warn', got {on_budget!r}")
         ticks = 0
         while self.backlog and ticks < max_ticks:
             self.step()
             ticks += 1
+        if self.backlog:
+            msg = (f"run() exhausted max_ticks={max_ticks} with "
+                   f"{self.backlog} row(s) still pending — the drain did "
+                   "NOT complete")
+            if on_budget == "raise":
+                raise IngestBacklogError(msg, self.backlog)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return ticks
 
     # -- queries -----------------------------------------------------------

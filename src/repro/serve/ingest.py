@@ -1,0 +1,419 @@
+"""Async fleet ingest: bounded admission + double-buffered slab assembly.
+
+``SketchFleetEngine`` advances S per-user sliding-window sketches as one
+SPMD program, but rows only reach that program through a host-side
+``(S, block, d)`` slab assembled in Python.  Before this module the
+engine built a fresh slab row-by-row inside ``step()`` and handed the
+numpy array straight to the jitted update — every tick paid allocation,
+a full per-user Python loop, and the host→device transfer, all serial
+with the device.  This module makes ingest a subsystem of its own:
+
+``AdmissionQueue``
+    The only holder of not-yet-ingested rows.  ``submit(user, row)``
+    validates at admission time (user id inside ``[0, S)``, row
+    convertible to a ``(d,)`` float32 vector) so malformed input fails
+    with a clear ``ValueError`` instead of an inscrutable XLA shape
+    error several ticks later, and applies bounded backpressure:
+    ``submit`` returns ``True`` (accepted) or ``False`` (deferred —
+    the queue is at ``capacity``) instead of growing without bound.
+
+``SyncIngest``
+    The pre-pipeline path, kept verbatim as the measured baseline and
+    for callers that want zero buffering between ``submit`` and device
+    state: one fresh host slab per tick, filled row-by-row over every
+    user, transferred at dispatch.
+
+``AsyncIngest``
+    The double-buffered admission pipeline.  Two preallocated host
+    slabs alternate: while the device consumes slab *k*, the rows for
+    slab *k+1* are packed into the other buffer (vectorized per-user
+    assignment, only previously-dirty entries re-zeroed) and prefetched
+    onto the fleet mesh with ``jax.device_put`` — so when the engine
+    next asks for a slab it receives an already-placed device array and
+    the sharded update launches without a transfer on the critical
+    path.  The prefetch transfers a private copy of the packed slab
+    (``device_put`` can be zero-copy on CPU, so transferring the reused
+    buffer itself would alias host memory a later tick repacks under a
+    still-running update), which is what lets the pipeline run with no
+    cross-tick blocking: device compute is never waited on, only
+    dispatched past.
+
+Tick/clock contract (what makes async bit-identical to sync): a tick
+ingests, for every user, the first ``min(block, pending_u)`` rows of
+that user's FIFO queue *as of the moment the tick's update is
+dispatched*, in user order, at timestamps ``t+1 .. t+block``.  The
+async pipeline stages slabs early, so rows submitted between staging
+and dispatch are topped up into the staged slab at the swap point
+(re-prefetching it); therefore the slab any tick dispatches is exactly
+the slab the synchronous path would have built, and fleet state, clock,
+and every ``query_user`` / ``query_cohort`` answer are bit-identical
+between the two modes for the same interleaving of ``submit`` and
+``step`` calls.  Staged-but-not-dispatched rows still count toward
+``backlog`` and are unwound back to the queue front by
+``flush_to_queue()`` before an engine checkpoint, so the checkpoint
+format is pipeline-agnostic.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["AdmissionQueue", "AsyncIngest", "IngestBacklogError",
+           "SyncIngest", "make_pipeline"]
+
+
+class IngestBacklogError(RuntimeError):
+    """``run(max_ticks)`` exhausted its tick budget with rows still
+    pending — the drain did NOT complete.  ``remaining`` is the backlog
+    left behind, so callers that catch can resume with a larger budget."""
+
+    def __init__(self, message: str, remaining: int):
+        super().__init__(message)
+        self.remaining = int(remaining)
+
+
+class AdmissionQueue:
+    """Bounded per-user FIFO admission of ``(d,)`` float32 rows.
+
+    ``capacity`` bounds the *total* admitted-but-not-ingested rows
+    across all users — queued rows plus any the pipeline is holding in
+    a staged slab (``reserved``) — so a caller can size host memory to
+    it (``None`` = unbounded, the historical behavior).  ``submit`` never
+    raises for a full queue — it returns ``False`` so the caller can
+    defer/shed — but malformed submissions (bad user id, wrong
+    shape/dtype) raise ``ValueError`` immediately: admission is the
+    last place an actionable error message is still possible.
+    """
+
+    def __init__(self, streams: int, d: int,
+                 capacity: Optional[int] = None):
+        self.S = int(streams)
+        self.d = int(d)
+        if capacity is not None and int(capacity) < 1:
+            raise ValueError(f"queue capacity {capacity} must be >= 1 "
+                             "(or None for unbounded)")
+        self.capacity = None if capacity is None else int(capacity)
+        self.queues: List[Deque[np.ndarray]] = [deque()
+                                                for _ in range(self.S)]
+        self._live: set = set()              # users with pending rows
+        self._n = 0
+        # rows admitted but currently held OUTSIDE the queue (a staged
+        # slab in the async pipeline): they left the FIFOs but are not on
+        # the device yet, so they still count against ``capacity``
+        self.reserved = 0
+        # bumped on every admission — lets a pipeline detect "no rows
+        # arrived since I staged" in O(1) instead of walking the users
+        self.seq = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def _validate(self, user, row) -> Tuple[int, np.ndarray]:
+        if isinstance(user, bool) or not isinstance(user, (int, np.integer)):
+            raise ValueError(
+                f"user id must be an integer, got {type(user).__name__} "
+                f"({user!r})")
+        u = int(user)
+        if not 0 <= u < self.S:
+            raise ValueError(
+                f"user id {u} outside the fleet's [0, {self.S}) stream "
+                "range")
+        arr = np.asarray(row)
+        if arr.shape != (self.d,):
+            raise ValueError(
+                f"user {u}: row has shape {arr.shape}, expected a "
+                f"({self.d},) float32 vector")
+        if not (np.issubdtype(arr.dtype, np.floating)
+                or np.issubdtype(arr.dtype, np.integer)):
+            raise ValueError(
+                f"user {u}: row dtype {arr.dtype} is not real-numeric — "
+                f"expected a ({self.d},) float32 vector")
+        return u, np.ascontiguousarray(arr, np.float32)
+
+    def submit(self, user, row) -> bool:
+        """Admit one row; ``True`` = accepted, ``False`` = deferred
+        (queue at capacity — resubmit after a drain)."""
+        u, arr = self._validate(user, row)
+        if self.capacity is not None \
+                and self._n + self.reserved >= self.capacity:
+            return False
+        self.queues[u].append(arr)
+        self._live.add(u)
+        self._n += 1
+        self.seq += 1
+        return True
+
+    def push_front(self, user: int, rows: List[np.ndarray]) -> None:
+        """Return rows to the *front* of a user's queue in their original
+        FIFO order (checkpoint unwind of a staged slab).  Bypasses the
+        capacity bound: these rows were already admitted once."""
+        if not rows:
+            return
+        self.queues[user].extendleft(reversed(rows))
+        self._live.add(user)
+        self._n += len(rows)
+        self.seq += 1
+
+    @property
+    def backlog(self) -> int:
+        return self._n
+
+    def live_users(self) -> List[int]:
+        """Users with pending rows, in (deterministic) user order."""
+        return sorted(self._live)
+
+    # -- draining -----------------------------------------------------------
+
+    def take_rowwise(self, buf: np.ndarray, block: int
+                     ) -> Tuple[List[int], List[int], int]:
+        """The legacy assembly: walk every user, pop row-by-row into
+        ``buf`` (assumed zeroed).  Kept as the synchronous baseline the
+        async pipeline is benchmarked against."""
+        touched: List[int] = []
+        counts: List[int] = []
+        n = 0
+        for u, q in enumerate(self.queues):
+            if not q:
+                continue
+            k = min(block, len(q))
+            for b in range(k):
+                buf[u, b] = q.popleft()
+            touched.append(u)
+            counts.append(k)
+            n += k
+        self._n -= n
+        self._live = {u for u in self._live if self.queues[u]}
+        return touched, counts, n
+
+    def take_user_into(self, user: int, buf: np.ndarray, at: int,
+                       block: int) -> int:
+        """Pop up to ``block - at`` rows of ``user`` into
+        ``buf[user, at:]``; returns how many were taken."""
+        q = self.queues[user]
+        k = min(block - at, len(q))
+        if k <= 0:
+            return 0
+        buf[user, at:at + k] = [q.popleft() for _ in range(k)]
+        if not q:
+            self._live.discard(user)
+        self._n -= k
+        return k
+
+    # -- persistence --------------------------------------------------------
+
+    def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Flat ``(pending_user, pending_rows)`` arrays — users walked in
+        order, per-user FIFO preserved (the engine checkpoint format)."""
+        users: List[int] = []
+        rows: List[np.ndarray] = []
+        for u, q in enumerate(self.queues):
+            for r in q:
+                users.append(u)
+                rows.append(r)
+        return (np.asarray(users, np.int32),
+                np.stack(rows) if rows
+                else np.zeros((0, self.d), np.float32))
+
+    def load(self, users: np.ndarray, rows: np.ndarray) -> None:
+        """Refill from a :meth:`snapshot` pair (checkpoint restore).
+        Bypasses the capacity bound: these rows were admitted once."""
+        for u, row in zip(users, rows):
+            u = int(u)
+            self.queues[u].append(np.ascontiguousarray(row, np.float32))
+            self._live.add(u)
+            self._n += 1
+        self.seq += 1
+
+
+class SyncIngest:
+    """The pre-pipeline ingest path: assemble a fresh host slab at
+    dispatch time, row-by-row, and let the jitted update transfer it.
+    Zero buffering between ``submit`` and device state."""
+
+    mode = "sync"
+
+    def __init__(self, queue: AdmissionQueue, block: int,
+                 put: Callable[[np.ndarray], Any]):
+        del put                       # transfer happens at dispatch
+        self.queue = queue
+        self.block = int(block)
+
+    @property
+    def staged_rows(self) -> int:
+        return 0
+
+    def staged_snapshot(self) -> List[Tuple[int, List[np.ndarray]]]:
+        return []
+
+    def next_slab(self) -> Tuple[Any, List[int], int]:
+        q = self.queue
+        slab = np.zeros((q.S, self.block, q.d), np.float32)
+        touched, _, nrows = q.take_rowwise(slab, self.block)
+        return slab, touched, nrows
+
+    def after_dispatch(self, consumed: Any = None) -> None:
+        pass
+
+    def flush_to_queue(self) -> None:
+        pass
+
+
+class AsyncIngest:
+    """Double-buffered admission pipeline (see module docstring).
+
+    ``put`` is the prefetch: host slab → device array placed with the
+    fleet's slab sharding (``jax.device_put``).  Two host packing
+    buffers alternate — one backs the staged (prefetched) slab so its
+    rows stay addressable for top-up and checkpoint unwind, the other
+    packs the next tick.  The prefetch hands the device a private copy
+    of the packed slab, so buffer reuse never races device compute and
+    the pipeline contains no cross-tick blocking at all.
+    """
+
+    mode = "async"
+
+    def __init__(self, queue: AdmissionQueue, block: int,
+                 put: Callable[[np.ndarray], Any]):
+        self.queue = queue
+        self.block = int(block)
+        self._put = put
+        shape = (queue.S, block, queue.d)
+        self._bufs = [np.zeros(shape, np.float32) for _ in range(2)]
+        self._dirty: List[List[Tuple[int, int]]] = [[], []]
+        self._cur = 0                              # next buffer to pack
+        # (buf index, device slab, touched, counts, nrows, queue seq at
+        # staging time — unchanged seq ⇒ the staged slab is still exact)
+        self._staged: Optional[Tuple[int, Any, List[int], List[int],
+                                     int, int]] = None
+
+    @property
+    def staged_rows(self) -> int:
+        return 0 if self._staged is None else self._staged[4]
+
+    # -- buffer lifecycle ---------------------------------------------------
+
+    def _assemble(self, i: int) -> Tuple[List[int], List[int], int]:
+        buf = self._bufs[i]
+        for u, k in self._dirty[i]:
+            buf[u, :k] = 0.0
+        touched: List[int] = []
+        counts: List[int] = []
+        nrows = 0
+        for u in self.queue.live_users():
+            k = self.queue.take_user_into(u, buf, 0, self.block)
+            touched.append(u)
+            counts.append(k)
+            nrows += k
+        self._dirty[i] = list(zip(touched, counts))
+        return touched, counts, nrows
+
+    def _prefetch(self, i: int) -> Any:
+        # the device array is fed a private COPY of the packing buffer:
+        # ``device_put`` may be zero-copy on CPU, so handing it the
+        # reused buffer directly would alias host memory the next tick
+        # repacks — corrupting a still-running update.  The copy makes
+        # buffer reuse race-free with no cross-tick synchronization (the
+        # packing buffer itself stays live for top-up/unwind while the
+        # slab is staged, which is why there are two of them).
+        return self._put(np.array(self._bufs[i]))
+
+    # -- pipeline interface -------------------------------------------------
+
+    def next_slab(self) -> Tuple[Any, List[int], int]:
+        """The slab for THIS tick: the staged one (topped up with any
+        rows submitted since it was packed — the sync contract) or,
+        cold, one assembled on the spot."""
+        if self._staged is None:
+            i = self._cur
+            touched, counts, nrows = self._assemble(i)
+            if nrows == 0:
+                return None, [], 0
+            self._cur ^= 1
+            return self._prefetch(i), touched, nrows
+        i, dev, touched, counts, nrows, seq = self._staged
+        self._staged = None
+        self.queue.reserved -= nrows
+        self._cur = i ^ 1
+        if self.queue.backlog and self.queue.seq != seq:
+            # top-up: a synchronous tick would include rows submitted
+            # after staging, up to `block` per user — match it exactly
+            k_of = dict(zip(touched, counts))
+            extra = 0
+            for u in self.queue.live_users():
+                got = self.queue.take_user_into(
+                    u, self._bufs[i], k_of.get(u, 0), self.block)
+                if got:
+                    k_of[u] = k_of.get(u, 0) + got
+                    extra += got
+            if extra:
+                touched = sorted(k_of)
+                counts = [k_of[u] for u in touched]
+                nrows += extra
+                self._dirty[i] = list(zip(touched, counts))
+                # the staged prefetch is stale; do NOT pay a second
+                # transfer here — hand back a private host copy and let
+                # the update transfer it at dispatch, exactly the sync
+                # path's cost.  (The copy, not the reused buffer itself:
+                # a zero-copy ``device_put`` downstream would alias
+                # memory the tick after next repacks.)  A topped-up tick
+                # therefore costs the same as sync, never more; the
+                # discarded staging transfer was paid off the critical
+                # path inside the previous tick's compute shadow.
+                dev = np.array(self._bufs[i])
+        return dev, touched, nrows
+
+    def after_dispatch(self, consumed: Any = None) -> None:
+        """Stage the next slab while the device consumes the current one
+        — the overlap that hides host assembly behind device compute."""
+        del consumed                   # prefetch copies: nothing to guard
+        if self._staged is not None or self.queue.backlog == 0:
+            return
+        i = self._cur
+        touched, counts, nrows = self._assemble(i)
+        self._cur ^= 1
+        self._staged = (i, self._prefetch(i), touched, counts, nrows,
+                        self.queue.seq)
+        self.queue.reserved += nrows       # staged rows still fill capacity
+
+    def staged_snapshot(self) -> List[Tuple[int, List[np.ndarray]]]:
+        """Copies of the staged slab's rows as ``(user, rows)`` pairs in
+        user order (each user's rows in FIFO order) — empty when nothing
+        is staged."""
+        if self._staged is None:
+            return []
+        i, _, touched, counts = self._staged[:4]
+        buf = self._bufs[i]
+        return [(u, [buf[u, b].copy() for b in range(k)])
+                for u, k in zip(touched, counts)]
+
+    def flush_to_queue(self) -> None:
+        """Unwind the staged slab's rows back to the queue *front* (FIFO
+        preserved) — checkpoints serialize the queue alone, so the
+        on-disk format is pipeline-agnostic."""
+        if self._staged is None:
+            return
+        rows = self.staged_snapshot()
+        i, nrows = self._staged[0], self._staged[4]
+        self._staged = None
+        self.queue.reserved -= nrows   # rows return to queue accounting
+        self._cur = i                  # the unwound buffer packs next
+        for u, user_rows in rows:
+            self.queue.push_front(u, user_rows)
+
+
+_PIPELINES: Dict[str, type] = {"sync": SyncIngest, "async": AsyncIngest}
+
+
+def make_pipeline(mode: str, queue: AdmissionQueue, *, block: int,
+                  put: Callable[[np.ndarray], Any]):
+    """Build an ingest pipeline: ``"async"`` (double-buffered, the
+    default engine path) or ``"sync"`` (the legacy assemble-at-dispatch
+    baseline).  Both produce bit-identical fleet state."""
+    cls = _PIPELINES.get(mode)
+    if cls is None:
+        raise ValueError(
+            f"unknown ingest mode {mode!r}; available: "
+            f"{tuple(sorted(_PIPELINES))}")
+    return cls(queue, block, put)

@@ -630,12 +630,20 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         ts = jnp.asarray(ts, jnp.int32)
         if ts.ndim == 1:
             ts = jnp.broadcast_to(ts, (S, ts.shape[0]))
+        if not isinstance(rows, jax.Array):
+            # host slab: place it along the stream axis here, explicitly.
+            # An ingest pipeline that prefetched the slab with
+            # meta["slab_sharding"] skips this branch entirely — the
+            # already-placed device array flows into the jitted program
+            # with no re-transfer.
+            rows = jax.device_put(np.asarray(rows), sharding)
         return shard_block(state, rows, ts)
 
     return SlidingSketch(
         name=f"shard[{sk.name}x{S}/{ndev}]",
         meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev,
-                  axis=axis, agg_box=fleet.meta["agg_box"]),
+                  axis=axis, slab_sharding=sharding,
+                  agg_box=fleet.meta["agg_box"]),
         init=init,
         update=fleet.update,
         update_block=update_block,
