@@ -135,4 +135,29 @@ print(f"\nSketchFleetEngine: drained {eng.rows_ingested} rows in {ticks} "
       f"ticks through the async pipeline (staged+prefetched slabs); "
       f"query_user/query_cohort shapes {B_u.shape}/{B_g.shape}")
 
+# --- Fused Pallas fleet tick + batched admission ---------------------------
+# mode="krylov" dumps via Gram → power iteration → rank-1 downdate; with
+# use_pallas=True that whole dump step is ONE fused kernel (downdate +
+# re-Gram + re-power over the (m, d) buffer), and under vmap_streams /
+# shard_streams the pallas_call batching rule prepends the stream axis to
+# the kernel grid — a fleet tick is a single launch over the (S, m, d)
+# slab.  Off-TPU the same call sites lower to the XLA ref path (export
+# REPRO_KERNEL_LOWERING=interpret to execute the kernel bodies anywhere);
+# repro.kernels.kernel_lowering() reports which lowering you got.
+# ``submit_many`` is the matching admission path: one vectorized copy
+# into the queue's row pool instead of a Python loop of submit() calls.
+from repro.kernels import kernel_lowering
+
+S_k, n_k = 8, 16
+eng_k = SketchFleetEngine("dsfd", d=d, streams=S_k, eps=eps, window=N_s,
+                          block=8, mode="krylov", use_pallas=True)
+users = np.repeat(np.arange(S_k), n_k)        # row owners, user-major
+rows = streams[:S_k, :n_k].reshape(-1, d)     # their rows, same order
+accepted = eng_k.submit_many(users, rows)     # one vectorized admission
+assert bool(accepted.all())                   # prefix-accept mask
+ticks_k = eng_k.run()
+print(f"fused krylov fleet ({kernel_lowering()} lowering): {S_k} streams × "
+      f"{n_k} rows admitted in one submit_many, drained in {ticks_k} "
+      f"single-launch ticks; query shape {eng_k.query_user(0).shape}")
+
 print("\nall guarantees hold ✓")

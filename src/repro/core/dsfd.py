@@ -220,28 +220,48 @@ def _rank1_downdate(buf: jax.Array, v: jax.Array, use_pallas: bool) -> jax.Array
 
 def _krylov_dumps(cfg: DSFDConfig, sk: SketchState, now, theta) -> SketchState:
     """While σ₁²(buf) ≥ θ: extract v₁ = u₁ᵀD/σ₁, snapshot σ₁·v₁, downdate
-    (Algorithm 3 lines 14-22, with power iteration per §3.1)."""
+    (Algorithm 3 lines 14-22, with power iteration per §3.1).
+
+    With ``use_pallas`` the whole dump step — v-extraction, snapshot,
+    downdate, Gram, power iteration — is ONE fused kernel launch
+    (``repro.kernels.fused_tick``).  Written unbatched, the pallas vmap
+    batching rule turns the fleet tick under ``vmap_streams`` /
+    ``shard_streams`` into a single launch over the (S, m, d) slab."""
 
     def cond(carry):
         sk, lam, _u, it = carry
         return (lam >= theta) & (it < cfg.m)
 
-    def body(carry):
-        sk, lam, u, it = carry
-        sigma = jnp.sqrt(jnp.maximum(lam, 1e-30))
-        v = (u @ sk.buf) / sigma                      # right singular vector
-        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
-        snap = sigma * v
-        s = jnp.where(it == 0, sk.last_t + 1, now)
-        sk = _ring_append(sk, snap, s, now)
-        buf = _rank1_downdate(sk.buf, v, cfg.use_pallas)
-        K = _gram(buf, cfg.use_pallas)
-        lam, u = _power_topvec(K, cfg.power_iters, cfg.use_pallas)
-        sk = sk._replace(buf=buf, sig1=lam)
-        return sk, lam, u, it + 1
+    if cfg.use_pallas:
+        from repro.kernels.fused_tick.ops import fused_krylov_step, gram_power
 
-    K = _gram(sk.buf, cfg.use_pallas)
-    lam, u = _power_topvec(K, cfg.power_iters, cfg.use_pallas)
+        def body(carry):
+            sk, lam, u, it = carry
+            snap, buf, lam2, u2 = fused_krylov_step(sk.buf, lam, u,
+                                                    iters=cfg.power_iters)
+            s = jnp.where(it == 0, sk.last_t + 1, now)
+            sk = _ring_append(sk, snap, s, now)
+            sk = sk._replace(buf=buf, sig1=lam2)
+            return sk, lam2, u2, it + 1
+
+        lam, u = gram_power(sk.buf, iters=cfg.power_iters)
+    else:
+        def body(carry):
+            sk, lam, u, it = carry
+            sigma = jnp.sqrt(jnp.maximum(lam, 1e-30))
+            v = (u @ sk.buf) / sigma                  # right singular vector
+            v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+            snap = sigma * v
+            s = jnp.where(it == 0, sk.last_t + 1, now)
+            sk = _ring_append(sk, snap, s, now)
+            buf = _rank1_downdate(sk.buf, v, cfg.use_pallas)
+            K = _gram(buf, cfg.use_pallas)
+            lam, u = _power_topvec(K, cfg.power_iters, cfg.use_pallas)
+            sk = sk._replace(buf=buf, sig1=lam)
+            return sk, lam, u, it + 1
+
+        K = _gram(sk.buf, cfg.use_pallas)
+        lam, u = _power_topvec(K, cfg.power_iters, cfg.use_pallas)
     sk = sk._replace(sig1=lam)
     sk, lam, _, _ = jax.lax.while_loop(
         cond, body, (sk, lam, u, jnp.zeros((), jnp.int32)))

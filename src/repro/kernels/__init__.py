@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from repro.kernels.dispatch import (  # noqa: F401
+    kernel_lowering,
+    resolve_lowering,
+)

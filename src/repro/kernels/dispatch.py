@@ -1,0 +1,52 @@
+"""Kernel lowering resolution shared by every ``ops.py`` wrapper.
+
+Three lowerings exist for each kernel:
+
+- ``"pallas"``    — the compiled Pallas/Mosaic kernel (TPU only),
+- ``"interpret"`` — the same Pallas kernel under ``interpret=True``
+  (Python-speed; debugging / CI oracles only),
+- ``"ref"``       — the pure-XLA ``ref.py`` implementation.
+
+Historically the wrappers hard-coded ``interpret = backend != "tpu"``,
+which silently ran kernels at Python speed on GPU/CPU and let benchmarks
+measure interpret mode without noticing.  ``resolve_lowering`` centralizes
+the choice: an explicit ``interpret=`` argument wins, then the
+``REPRO_KERNEL_LOWERING`` env var, then ``auto`` = pallas on TPU and the
+XLA ``ref`` path everywhere else.  Resolution reads the environment at
+*trace* time (the public wrappers are not jitted around it), so set the
+env var before the first call of a jitted program.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_LOWERING"
+LOWERINGS = ("pallas", "interpret", "ref")
+
+
+def resolve_lowering(interpret: bool | None = None) -> str:
+    """Pick the lowering for one kernel call.
+
+    ``interpret=True/False`` (the legacy wrapper argument) forces
+    interpret/pallas mode and bypasses the env var — existing test-suite
+    call sites keep their meaning.  ``interpret=None`` consults
+    ``REPRO_KERNEL_LOWERING`` ∈ {auto, pallas, interpret, ref}.
+    """
+    if interpret is not None:
+        return "interpret" if interpret else "pallas"
+    env = os.environ.get(ENV_VAR, "auto").strip().lower()
+    if env in LOWERINGS:
+        return env
+    if env not in ("", "auto"):
+        raise ValueError(
+            f"{ENV_VAR}={env!r} is not one of "
+            f"{('auto',) + LOWERINGS}")
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def kernel_lowering() -> str:
+    """The lowering kernels pick by default right now (for logs/benchmarks)."""
+    return resolve_lowering(None)

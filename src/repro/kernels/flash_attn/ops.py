@@ -21,28 +21,32 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_lowering
 from repro.kernels.flash_attn.kernel import flash_fwd_pallas
 from repro.kernels.flash_attn.ref import flash_ref
 
 NEG_INF = -1e30
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _fwd_lowered(q, k, v, causal, cq, ckv):
+    """(o, lse) via the resolved lowering: pallas / interpret / ref-XLA."""
+    lowering = resolve_lowering(None)
+    if lowering == "ref":
+        return flash_ref(q, k, v, causal=causal)
+    return flash_fwd_pallas(q, k, v, causal=causal, cq=cq, ckv=ckv,
+                            interpret=lowering == "interpret")
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, causal: bool = True, cq: int = 256,
                     ckv: int = 256):
     """q: (BH, S, dh); k, v: (BHkv, S, dh).  Returns (BH, S, dh)."""
-    o, _ = flash_fwd_pallas(q, k, v, causal=causal, cq=cq, ckv=ckv,
-                            interpret=_use_interpret())
+    o, _ = _fwd_lowered(q, k, v, causal, cq, ckv)
     return o
 
 
 def _fwd(q, k, v, causal, cq, ckv):
-    o, lse = flash_fwd_pallas(q, k, v, causal=causal, cq=cq, ckv=ckv,
-                              interpret=_use_interpret())
+    o, lse = _fwd_lowered(q, k, v, causal, cq, ckv)
     return o, (q, k, v, o, lse)
 
 

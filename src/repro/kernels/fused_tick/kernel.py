@@ -1,0 +1,132 @@
+"""Pallas TPU kernels: the fused DS-FD krylov tick.
+
+``core/dsfd.py:_krylov_dumps`` (Algorithm 3 lines 14-22 with the §3.1
+power-iteration substitution) previously issued three separate kernels per
+dump iteration — rank-1 downdate, Gram, power iteration — bouncing the
+(m, d) buffer through HBM between each.  Both kernels here keep the whole
+buffer resident in VMEM for the full iteration:
+
+- ``gram_power_pallas``:   K = D Dᵀ → (λ̂, û) in one launch (loop entry).
+- ``fused_step_pallas``:   one full dump step — extract v₁ = ûᵀD/σ̂,
+  emit the snapshot σ̂·v₁, downdate D ← D − (Dv)vᵀ, re-Gram, re-power —
+  in one launch.
+
+Sizes: m = 2ℓ ≤ 512 and the d-block of a fleet slab are small enough that
+D (m × d), K (m × m) and the iteration vectors all fit VMEM together, so a
+single-program grid is used.  Crucially the kernels are written unbatched:
+``pallas_call``'s vmap batching rule prepends the batch dimension to the
+grid, so under ``vmap_streams``/``shard_streams`` a fleet tick's krylov
+work lowers to ONE launch with grid (S,) over the (S, m, d) slab.
+
+Zero padding (ops.py pads m → mult of 8, d → mult of 128) is exact:
+padded rows/cols of D contribute nothing to K or v, and a zero row of K
+maps every iterate's padded coordinate to exactly 0, so padding can never
+capture the top eigenvector (regression-tested in
+tests/kernels/test_padding.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _power(K, iters: int):
+    """Power iteration on K (m, m) f32, resident in VMEM.  Identical math
+    to the standalone power_iter kernel: u₀ uniform, ‖·‖ floor 1e-30 on
+    the squared norm."""
+    m = K.shape[0]
+    u0 = jnp.full((1, m), 1.0 / jnp.sqrt(jnp.float32(m)), jnp.float32)
+
+    def body(_, u):
+        w = jax.lax.dot_general(u, K, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        nrm = jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-30))
+        return w / nrm
+
+    u = jax.lax.fori_loop(0, iters, body, u0)
+    Ku = jax.lax.dot_general(u, K, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    lam = jnp.sum(Ku * u)
+    return lam, u
+
+
+def _gram_power_kernel(d_ref, lam_ref, u_ref, *, iters: int):
+    D = d_ref[...].astype(jnp.float32)                       # (m, d) in VMEM
+    K = jax.lax.dot_general(D, D, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    lam, u = _power(K, iters)
+    lam_ref[...] = jnp.full((1, 1), lam, lam_ref.dtype)
+    u_ref[...] = u.astype(u_ref.dtype)
+
+
+def gram_power_pallas(D: jax.Array, *, iters: int = 24,
+                      interpret: bool = False):
+    """(λ̂, û) of K = D Dᵀ.  D: (m, d), m mult of 8, d mult of 128
+    (ops.py pads).  Returns λ̂ (1, 1) and û (1, m), both f32."""
+    m, d = D.shape
+    kern = functools.partial(_gram_power_kernel, iters=iters)
+    lam, u = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, d), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, m), jnp.float32)],
+        interpret=interpret,
+    )(D)
+    return lam, u
+
+
+def _fused_step_kernel(d_ref, lam_ref, u_ref,
+                       snap_ref, dout_ref, lamo_ref, uo_ref, *, iters: int):
+    D = d_ref[...].astype(jnp.float32)                       # (m, d)
+    lam = lam_ref[0, 0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)                       # (1, m)
+
+    # v₁ = ûᵀD / σ̂, renormalized (Algorithm 3 line 15 / §3.1).
+    sigma = jnp.sqrt(jnp.maximum(lam, 1e-30))
+    v = jax.lax.dot_general(u, D, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32) / sigma
+    v = v / jnp.sqrt(jnp.maximum(jnp.sum(v * v), 1e-30))     # (1, d)
+    snap_ref[...] = (sigma * v).astype(snap_ref.dtype)
+
+    # Rank-1 downdate D ← D − (Dv)vᵀ, then re-Gram + re-power in place.
+    p = jax.lax.dot_general(D, v, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (m, 1)
+    D2 = D - p * v
+    dout_ref[...] = D2.astype(dout_ref.dtype)
+    K = jax.lax.dot_general(D2, D2, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    lam2, u2 = _power(K, iters)
+    lamo_ref[...] = jnp.full((1, 1), lam2, lamo_ref.dtype)
+    uo_ref[...] = u2.astype(uo_ref.dtype)
+
+
+def fused_step_pallas(D: jax.Array, lam: jax.Array, u: jax.Array, *,
+                      iters: int = 24, interpret: bool = False):
+    """One krylov dump step.  D: (m, d); lam: (1, 1); u: (1, m) — padded
+    shapes.  Returns (snap (1, d), D' (m, d), λ̂' (1, 1), û' (1, m))."""
+    m, d = D.shape
+    kern = functools.partial(_fused_step_kernel, iters=iters)
+    snap, D2, lam2, u2 = pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, d), lambda i: (0, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, d), lambda i: (0, 0)),
+                   pl.BlockSpec((m, d), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, d), jnp.float32),
+                   jax.ShapeDtypeStruct((m, d), D.dtype),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, m), jnp.float32)],
+        interpret=interpret,
+    )(D, lam, u)
+    return snap, D2, lam2, u2

@@ -1,0 +1,77 @@
+"""Public wrappers for the fused krylov-tick kernels.
+
+``gram_power`` / ``fused_krylov_step`` take and return *unpadded* arrays
+(λ scalar, u (m,), snap (d,)) so ``core/dsfd.py`` can drop them into the
+krylov while-loop body unchanged.  Padding (m → mult of 8, d → mult of
+128) happens here and is exact — see kernel.py.  Lowering follows
+``repro.kernels.dispatch``: pallas on TPU, the pure-XLA ref off-TPU
+(still one fused XLA computation, and still vmap/shard_map-compatible),
+interpret only when forced.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import resolve_lowering
+from repro.kernels.fused_tick.kernel import fused_step_pallas, gram_power_pallas
+from repro.kernels.fused_tick.ref import fused_krylov_step_ref, gram_power_ref
+
+
+def _pads(m: int, d: int):
+    return (-m) % 8, (-d) % 128
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def _gram_power_kernel(D: jax.Array, *, iters: int, interpret: bool):
+    m, d = D.shape
+    pm, pd = _pads(m, d)
+    Dp = jnp.pad(D, ((0, pm), (0, pd)))
+    lam, u = gram_power_pallas(Dp, iters=iters, interpret=interpret)
+    return lam[0, 0], u[0, :m]
+
+
+_gram_power_ref = jax.jit(gram_power_ref, static_argnames=("iters",))
+
+
+def gram_power(D: jax.Array, *, iters: int = 24,
+               interpret: bool | None = None):
+    """(λ̂, û) of K = D Dᵀ in one fused launch.  D: (m, d)."""
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _gram_power_ref(D, iters=iters)
+    return _gram_power_kernel(D, iters=iters,
+                              interpret=lowering == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def _fused_step_kernel(D: jax.Array, lam: jax.Array, u: jax.Array, *,
+                       iters: int, interpret: bool):
+    m, d = D.shape
+    pm, pd = _pads(m, d)
+    Dp = jnp.pad(D, ((0, pm), (0, pd)))
+    lp = jnp.reshape(lam.astype(jnp.float32), (1, 1))
+    up = jnp.pad(jnp.reshape(u.astype(jnp.float32), (1, m)),
+                 ((0, 0), (0, pm)))
+    snap, D2, lam2, u2 = fused_step_pallas(Dp, lp, up, iters=iters,
+                                           interpret=interpret)
+    return snap[0, :d], D2[:m, :d], lam2[0, 0], u2[0, :m]
+
+
+_fused_step_ref = jax.jit(fused_krylov_step_ref, static_argnames=("iters",))
+
+
+def fused_krylov_step(D: jax.Array, lam: jax.Array, u: jax.Array, *,
+                      iters: int = 24, interpret: bool | None = None):
+    """One krylov dump step — v-extraction, snapshot, rank-1 downdate,
+    Gram, power iteration — fused into one launch.
+
+    D: (m, d); lam scalar; u (m,).  Returns (snap (d,), D', λ̂', û')."""
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _fused_step_ref(D, lam, u, iters=iters)
+    return _fused_step_kernel(D, lam, u, iters=iters,
+                              interpret=lowering == "interpret")

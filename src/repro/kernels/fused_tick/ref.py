@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the fused krylov-tick kernels (identical math).
+
+Mirrors the kernel exactly — including the uniform u₀ start and the
+``sqrt(max(Σw², 1e-30))`` norm floor — so interpret-vs-ref comparisons
+can use tight tolerances.  (The inline non-pallas path in ``core/dsfd.py``
+floors ‖w‖ at 1e-30 instead of 1e-15; the two only differ on degenerate
+≈ zero buffers, which is covered by the documented fp tolerance of the
+fused-vs-per-stream differential oracle.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _power_ref(K: jax.Array, iters: int):
+    m = K.shape[0]
+    u = jnp.full((m,), 1.0 / jnp.sqrt(jnp.float32(m)), jnp.float32)
+
+    def body(_, u):
+        w = K @ u
+        return w / jnp.sqrt(jnp.maximum(jnp.sum(w * w), 1e-30))
+
+    u = jax.lax.fori_loop(0, iters, body, u)
+    lam = u @ (K @ u)
+    return lam, u
+
+
+def gram_power_ref(D: jax.Array, iters: int = 24):
+    """(λ̂, û) of K = D Dᵀ.  D: (m, d).  Returns λ̂ scalar and û (m,)."""
+    Df = D.astype(jnp.float32)
+    K = Df @ Df.T
+    return _power_ref(K, iters)
+
+
+def fused_krylov_step_ref(D: jax.Array, lam: jax.Array, u: jax.Array,
+                          iters: int = 24):
+    """One krylov dump step.  D: (m, d); lam scalar; u: (m,).
+    Returns (snap (d,), D' (m, d), λ̂' scalar, û' (m,))."""
+    Df = D.astype(jnp.float32)
+    sigma = jnp.sqrt(jnp.maximum(lam.astype(jnp.float32), 1e-30))
+    v = (u.astype(jnp.float32) @ Df) / sigma
+    v = v / jnp.sqrt(jnp.maximum(jnp.sum(v * v), 1e-30))
+    snap = sigma * v
+    D2 = Df - (Df @ v)[:, None] * v[None, :]
+    K = D2 @ D2.T
+    lam2, u2 = _power_ref(K, iters)
+    return snap, D2.astype(D.dtype), lam2, u2

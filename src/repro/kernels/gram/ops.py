@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the gram kernel (handles padding + backend)."""
+"""Public wrapper for the gram kernel (padding + lowering dispatch)."""
 
 from __future__ import annotations
 
@@ -7,7 +7,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_lowering
 from repro.kernels.gram.kernel import gram_pallas
+from repro.kernels.gram.ref import gram_ref
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -21,14 +23,22 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gram(x: jax.Array, *, block_d: int = 512,
-         interpret: bool | None = None) -> jax.Array:
-    """K = x @ x.T via the Pallas kernel.  Zero-padding rows/cols is exact
-    for a Gram matrix (padded dims contribute 0)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _gram_kernel(x: jax.Array, *, block_d: int, interpret: bool) -> jax.Array:
     m = x.shape[0]
     bd = min(block_d, max(128, 128 * ((x.shape[1] + 127) // 128)))
     xp = _pad_to(_pad_to(x, 0, 8), 1, bd)
     out = gram_pallas(xp, block_d=bd, interpret=interpret)
     return out[:m, :m]
+
+
+_gram_ref = jax.jit(gram_ref)
+
+
+def gram(x: jax.Array, *, block_d: int = 512,
+         interpret: bool | None = None) -> jax.Array:
+    """K = x @ x.T.  Zero-padding rows/cols is exact for a Gram matrix
+    (padded dims contribute 0)."""
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _gram_ref(x)
+    return _gram_kernel(x, block_d=block_d, interpret=lowering == "interpret")

@@ -1,4 +1,9 @@
-"""jit'd public wrapper for the fused power-iteration kernel."""
+"""Public wrapper for the fused power-iteration kernel.
+
+Lowering (pallas / interpret / ref) is resolved at trace time by
+``repro.kernels.dispatch.resolve_lowering``; off-TPU the default is the
+pure-XLA ``ref`` path, never silent interpret mode.
+"""
 
 from __future__ import annotations
 
@@ -7,17 +12,28 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_lowering
 from repro.kernels.power_iter.kernel import power_iter_pallas
+from repro.kernels.power_iter.ref import power_iter_ref
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "interpret"))
-def power_iter(K: jax.Array, *, iters: int = 24,
-               interpret: bool | None = None):
-    """Top eigenpair (λ, u) of a PSD matrix.  Returns λ scalar and u (m,)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _power_iter_kernel(K: jax.Array, *, iters: int, interpret: bool):
     m = K.shape[0]
     pad = (-m) % 8
     Kp = jnp.pad(K, ((0, pad), (0, pad)))  # zero-padding keeps eigenpairs
     lam, u = power_iter_pallas(Kp, iters=iters, interpret=interpret)
     return lam[0, 0], u[0, :m]
+
+
+_power_iter_ref = jax.jit(power_iter_ref, static_argnames=("iters",))
+
+
+def power_iter(K: jax.Array, *, iters: int = 24,
+               interpret: bool | None = None):
+    """Top eigenpair (λ, u) of a PSD matrix.  Returns λ scalar and u (m,)."""
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _power_iter_ref(K, iters=iters)
+    return _power_iter_kernel(K, iters=iters,
+                              interpret=lowering == "interpret")

@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the rank-1 downdate kernel."""
+"""Public wrapper for the rank-1 downdate kernel."""
 
 from __future__ import annotations
 
@@ -7,14 +7,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_lowering
 from repro.kernels.rank1_downdate.kernel import rank1_downdate_pallas
+from repro.kernels.rank1_downdate.ref import rank1_downdate_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def rank1_downdate(D: jax.Array, v: jax.Array, *, block_d: int = 512,
-                   interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _rank1_downdate_kernel(D: jax.Array, v: jax.Array, *, block_d: int,
+                           interpret: bool) -> jax.Array:
     m, d = D.shape
     bd = min(block_d, max(128, 128 * ((d + 127) // 128)))
     pad_m, pad_d = (-m) % 8, (-d) % bd
@@ -22,3 +22,15 @@ def rank1_downdate(D: jax.Array, v: jax.Array, *, block_d: int = 512,
     vp = jnp.pad(v, (0, pad_d))
     out = rank1_downdate_pallas(Dp, vp, block_d=bd, interpret=interpret)
     return out[:m, :d]
+
+
+_rank1_downdate_ref = jax.jit(rank1_downdate_ref)
+
+
+def rank1_downdate(D: jax.Array, v: jax.Array, *, block_d: int = 512,
+                   interpret: bool | None = None) -> jax.Array:
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _rank1_downdate_ref(D, v)
+    return _rank1_downdate_kernel(D, v, block_d=block_d,
+                                  interpret=lowering == "interpret")

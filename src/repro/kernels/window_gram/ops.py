@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the window-gram kernel."""
+"""Public wrapper for the window-gram kernel."""
 
 from __future__ import annotations
 
@@ -7,17 +7,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_lowering
 from repro.kernels.window_gram.kernel import window_gram_pallas
+from repro.kernels.window_gram.ref import window_gram_ref
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def window_gram(A: jax.Array, *, block_n: int = 256,
-                interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _window_gram_kernel(A: jax.Array, *, block_n: int,
+                        interpret: bool) -> jax.Array:
     n, d = A.shape
     bn = min(block_n, max(8, 8 * ((n + 7) // 8)))
     pad_n, pad_d = (-n) % bn, (-d) % 128
     Ap = jnp.pad(A, ((0, pad_n), (0, pad_d)))
     out = window_gram_pallas(Ap, block_n=bn, interpret=interpret)
     return out[:d, :d]
+
+
+_window_gram_ref = jax.jit(window_gram_ref)
+
+
+def window_gram(A: jax.Array, *, block_n: int = 256,
+                interpret: bool | None = None) -> jax.Array:
+    lowering = resolve_lowering(interpret)
+    if lowering == "ref":
+        return _window_gram_ref(A)
+    return _window_gram_kernel(A, block_n=block_n,
+                               interpret=lowering == "interpret")

@@ -162,7 +162,18 @@ class SketchFleetEngine:
     admits rows through a validating, optionally capacity-bounded
     ``AdmissionQueue`` (``repro.serve.ingest``) — it returns ``True``
     (accepted) or ``False`` (deferred: queue at ``queue_capacity``);
-    malformed input raises at admission.  Each ``step()`` takes a fixed
+    malformed input raises at admission.  ``submit_many(users, rows)`` is
+    the batched fast path: one vectorized validation and ONE copy into
+    the queue's row pool for a whole ``(n,) users / (n, d) rows`` batch
+    (per-user FIFO order = batch order), returning an ``(n,)`` bool
+    acceptance mask with prefix-accept semantics at capacity::
+
+        users = np.repeat(np.arange(S), 4)          # 4 rows per user
+        rows  = batch.reshape(-1, d)
+        accepted = eng.submit_many(users, rows)     # one call, no loop
+        eng.run()
+
+    Each ``step()`` takes a fixed
     ``(S, block, d)`` slab from the ingest pipeline — users with nothing
     queued contribute zero rows, which the DS-FD family treats as idle
     ticks (expiry/swap advance, nothing is absorbed) — and advances every
@@ -334,6 +345,16 @@ class SketchFleetEngine:
         ``True`` (accepted) or ``False`` (deferred — the queue is at
         ``queue_capacity``; drain with ``step``/``run`` and resubmit)."""
         return self.queue.submit(user, row)
+
+    def submit_many(self, users, rows) -> np.ndarray:
+        """Batched admission: ``users`` (n,) int ids, ``rows`` (n, d)
+        float32 — one vectorized validation + one copy into the queue's
+        row pool, no per-row Python (see the class docstring).  Returns
+        an (n,) bool mask of accepted rows; at ``queue_capacity`` the
+        longest fitting prefix is admitted (resubmit the ``~mask``
+        suffix after a drain).  Malformed input raises ``ValueError``
+        with nothing admitted."""
+        return self.queue.submit_many(users, rows)
 
     @property
     def backlog(self) -> int:

@@ -16,18 +16,31 @@ with the device.  This module makes ingest a subsystem of its own:
     error several ticks later, and applies bounded backpressure:
     ``submit`` returns ``True`` (accepted) or ``False`` (deferred —
     the queue is at ``capacity``) instead of growing without bound.
+    ``submit_many(users, rows)`` is the batched form: one vectorized
+    validation + one copy into the queue's row pool for the whole batch.
+
+    Storage is a flat structure-of-arrays row pool (one int32 user-id
+    array + one float32 row matrix, in admission order — which IS
+    per-user FIFO order), not S Python deques.  Slab assembly
+    (``take_block``) is a numpy group-rank scatter: a stable argsort by
+    user id ranks each pending row within its user's FIFO, a boolean
+    mask selects ranks below the per-user budget, and one fancy-index
+    scatter writes every selected row into ``buf[user, rank]`` — zero
+    per-row Python.  The live-user set is maintained incrementally
+    (O(#touched) per tick, never a full O(S) sweep), so idle/sparse
+    ticks on large fleets stay cheap.
 
 ``SyncIngest``
-    The pre-pipeline path, kept verbatim as the measured baseline and
-    for callers that want zero buffering between ``submit`` and device
-    state: one fresh host slab per tick, filled row-by-row over every
-    user, transferred at dispatch.
+    The pre-pipeline path, kept as the measured baseline and for
+    callers that want zero buffering between ``submit`` and device
+    state: one fresh host slab per tick, packed at dispatch time,
+    transferred by the jitted update.
 
 ``AsyncIngest``
     The double-buffered admission pipeline.  Two preallocated host
     slabs alternate: while the device consumes slab *k*, the rows for
-    slab *k+1* are packed into the other buffer (vectorized per-user
-    assignment, only previously-dirty entries re-zeroed) and prefetched
+    slab *k+1* are packed into the other buffer (one vectorized
+    scatter, only previously-dirty streams re-zeroed) and prefetched
     onto the fleet mesh with ``jax.device_put`` — so when the engine
     next asks for a slab it receives an already-placed device array and
     the sharded update launches without a transfer on the critical
@@ -86,6 +99,12 @@ class AdmissionQueue:
     defer/shed — but malformed submissions (bad user id, wrong
     shape/dtype) raise ``ValueError`` immediately: admission is the
     last place an actionable error message is still possible.
+
+    Internally rows live in one flat structure-of-arrays pool in
+    admission order (see module docstring); ``queues`` is a read-only
+    per-user *view* materialized on access for diagnostics and
+    back-compat — mutate through ``submit``/``take_block``, never
+    through it.
     """
 
     def __init__(self, streams: int, d: int,
@@ -96,17 +115,44 @@ class AdmissionQueue:
             raise ValueError(f"queue capacity {capacity} must be >= 1 "
                              "(or None for unbounded)")
         self.capacity = None if capacity is None else int(capacity)
-        self.queues: List[Deque[np.ndarray]] = [deque()
-                                                for _ in range(self.S)]
+        # flat row pool: valid rows live at [_start, _len) in admission
+        # order (admission order restricted to one user = that user's
+        # FIFO order, which is the only ordering the tick contract needs)
+        self._ubuf = np.zeros((64,), np.int32)
+        self._rbuf = np.zeros((64, self.d), np.float32)
+        self._start = 0
+        self._len = 0
+        self._counts = np.zeros((self.S,), np.int64)  # pending per user
         self._live: set = set()              # users with pending rows
-        self._n = 0
         # rows admitted but currently held OUTSIDE the queue (a staged
-        # slab in the async pipeline): they left the FIFOs but are not on
+        # slab in the async pipeline): they left the pool but are not on
         # the device yet, so they still count against ``capacity``
         self.reserved = 0
         # bumped on every admission — lets a pipeline detect "no rows
         # arrived since I staged" in O(1) instead of walking the users
         self.seq = 0
+
+    # -- row pool -----------------------------------------------------------
+
+    def _ensure(self, extra: int) -> None:
+        """Make room for ``extra`` appended rows: compact the consumed
+        prefix away and double the pool until it fits (amortized O(1))."""
+        if self._len + extra <= self._ubuf.shape[0]:
+            return
+        n = self._len - self._start
+        cap = max(self._ubuf.shape[0], 64)
+        while cap < n + extra:
+            cap *= 2
+        ubuf = np.zeros((cap,), np.int32)
+        rbuf = np.zeros((cap, self.d), np.float32)
+        ubuf[:n] = self._ubuf[self._start:self._len]
+        rbuf[:n] = self._rbuf[self._start:self._len]
+        self._ubuf, self._rbuf = ubuf, rbuf
+        self._start, self._len = 0, n
+
+    def _pending_views(self) -> Tuple[np.ndarray, np.ndarray]:
+        return (self._ubuf[self._start:self._len],
+                self._rbuf[self._start:self._len])
 
     # -- admission ----------------------------------------------------------
 
@@ -137,100 +183,230 @@ class AdmissionQueue:
         (queue at capacity — resubmit after a drain)."""
         u, arr = self._validate(user, row)
         if self.capacity is not None \
-                and self._n + self.reserved >= self.capacity:
+                and self.backlog + self.reserved >= self.capacity:
             return False
-        self.queues[u].append(arr)
+        self._ensure(1)
+        self._ubuf[self._len] = u
+        self._rbuf[self._len] = arr
+        self._len += 1
+        self._counts[u] += 1
         self._live.add(u)
-        self._n += 1
         self.seq += 1
         return True
+
+    def submit_many(self, users, rows) -> np.ndarray:
+        """Batched admission: one vectorized validation + ONE copy into
+        the row pool for the whole ``(n,) users / (n, d) rows`` batch —
+        no per-row Python.  Per-user FIFO order is the batch order.
+
+        Malformed input raises ``ValueError`` (nothing is admitted);
+        capacity applies prefix-accept semantics: the longest prefix
+        that fits is admitted and an ``(n,)`` bool mask says which rows
+        were accepted (all-``True`` when everything fit — resubmit the
+        ``~mask`` suffix after a drain)."""
+        ua = np.asarray(users)
+        if ua.ndim != 1 or (ua.size and (
+                ua.dtype == np.bool_
+                or not np.issubdtype(ua.dtype, np.integer))):
+            raise ValueError(
+                f"users must be a 1-D integer array, got shape "
+                f"{ua.shape} dtype {ua.dtype}")
+        ra = np.asarray(rows)
+        if ra.shape != (ua.size, self.d):
+            raise ValueError(
+                f"rows has shape {ra.shape}, expected "
+                f"({ua.size}, {self.d}) to match {ua.size} user id(s)")
+        if ua.size and not (np.issubdtype(ra.dtype, np.floating)
+                            or np.issubdtype(ra.dtype, np.integer)):
+            raise ValueError(
+                f"rows dtype {ra.dtype} is not real-numeric — expected "
+                f"float32 rows")
+        if ua.size:
+            bad = (ua < 0) | (ua >= self.S)
+            if bad.any():
+                raise ValueError(
+                    f"user id {int(ua[bad][0])} outside the fleet's "
+                    f"[0, {self.S}) stream range")
+        n = int(ua.size)
+        mask = np.zeros((n,), bool)
+        if n == 0:
+            return mask
+        if self.capacity is None:
+            k = n
+        else:
+            free = self.capacity - (self.backlog + self.reserved)
+            k = max(0, min(n, free))
+        if k == 0:
+            return mask
+        ua = ua[:k].astype(np.int32, copy=False)
+        self._ensure(k)
+        self._ubuf[self._len:self._len + k] = ua
+        self._rbuf[self._len:self._len + k] = ra[:k]
+        self._len += k
+        self._counts += np.bincount(ua, minlength=self.S)
+        self._live.update(int(u) for u in np.unique(ua))
+        self.seq += 1
+        mask[:k] = True
+        return mask
 
     def push_front(self, user: int, rows: List[np.ndarray]) -> None:
         """Return rows to the *front* of a user's queue in their original
         FIFO order (checkpoint unwind of a staged slab).  Bypasses the
         capacity bound: these rows were already admitted once."""
-        if not rows:
+        k = len(rows)
+        if not k:
             return
-        self.queues[user].extendleft(reversed(rows))
-        self._live.add(user)
-        self._n += len(rows)
+        if self._start < k:
+            # no headroom at the pool front: reopen some by re-packing
+            n = self._len - self._start
+            cap = max(self._ubuf.shape[0], 64)
+            while cap < n + 2 * k:
+                cap *= 2
+            ubuf = np.zeros((cap,), np.int32)
+            rbuf = np.zeros((cap, self.d), np.float32)
+            ubuf[k:k + n] = self._ubuf[self._start:self._len]
+            rbuf[k:k + n] = self._rbuf[self._start:self._len]
+            self._ubuf, self._rbuf = ubuf, rbuf
+            self._start, self._len = k, k + n
+        self._start -= k
+        self._ubuf[self._start:self._start + k] = int(user)
+        self._rbuf[self._start:self._start + k] = np.asarray(rows, np.float32)
+        self._counts[user] += k
+        self._live.add(int(user))
         self.seq += 1
 
     @property
     def backlog(self) -> int:
-        return self._n
+        return self._len - self._start
 
     def live_users(self) -> List[int]:
         """Users with pending rows, in (deterministic) user order."""
         return sorted(self._live)
 
+    @property
+    def queues(self) -> List[Deque[np.ndarray]]:
+        """Read-only per-user FIFO view of the flat row pool (diagnostic
+        / back-compat — the engine's ``_pending`` and checkpoint tests
+        read it).  Mutations to the returned deques are NOT seen by the
+        queue."""
+        qs: List[Deque[np.ndarray]] = [deque() for _ in range(self.S)]
+        users, rows = self._pending_views()
+        for i in np.argsort(users, kind="stable"):
+            qs[int(users[i])].append(rows[i].copy())
+        return qs
+
     # -- draining -----------------------------------------------------------
+
+    def take_block(self, buf: np.ndarray, block: int,
+                   base: Optional[np.ndarray] = None
+                   ) -> Tuple[List[int], List[int], int]:
+        """Scatter, for every user, their first ``min(block - base_u,
+        pending_u)`` FIFO rows into ``buf[u, base_u:]`` — one vectorized
+        numpy pass, no per-row Python.
+
+        ``buf`` is the (S, block, d) slab (rows being written are
+        assumed zeroed); ``base`` (default all-zero) gives per-user
+        write offsets, which is how the async pipeline tops up an
+        already-staged slab.  Returns ``(touched, counts, nrows)`` with
+        ``touched`` the users that received ≥ 1 row (ascending) and
+        ``counts`` how many each received."""
+        if self.backlog == 0:
+            return [], [], 0
+        if base is None:
+            allow = np.full((self.S,), int(block), np.int64)
+        else:
+            allow = np.maximum(int(block) - np.asarray(base, np.int64), 0)
+            # O(S) early-out BEFORE touching the pool: the steady-state
+            # top-up of a fully-staged slab has allow ≡ 0, and sorting
+            # the whole backlog just to take nothing would put an
+            # O(backlog log backlog) term on every paced tick
+            if not np.any(np.minimum(allow, self._counts) > 0):
+                return [], [], 0
+        users, rows = self._pending_views()
+        # rank of each pending row within its user's FIFO: stable-sort
+        # by user, subtract each group's start index, scatter back
+        order = np.argsort(users, kind="stable")
+        su = users[order]
+        starts = np.flatnonzero(np.r_[True, su[1:] != su[:-1]])
+        sizes = np.diff(np.r_[starts, su.size])
+        rank_sorted = np.arange(su.size) - np.repeat(starts, sizes)
+        rank = np.empty((su.size,), np.int64)
+        rank[order] = rank_sorted
+        sel = rank < allow[users]
+        nrows = int(np.count_nonzero(sel))
+        if nrows == 0:
+            return [], [], 0
+        tu, tr = users[sel], rank[sel]
+        if base is not None:
+            tr = tr + np.asarray(base, np.int64)[tu]
+        buf[tu, tr] = rows[sel]
+        taken = np.bincount(tu, minlength=self.S)
+        self._counts -= taken
+        # compact the survivors to the pool front (fancy-index = copies,
+        # so the overlapping write is safe)
+        keep = ~sel
+        nkeep = int(np.count_nonzero(keep))
+        if nkeep:
+            self._ubuf[:nkeep] = users[keep]
+            self._rbuf[:nkeep] = rows[keep]
+        self._start, self._len = 0, nkeep
+        # incremental live-set maintenance: only users that lost rows
+        # this tick can have gone empty — never a full O(S) sweep
+        touched = np.flatnonzero(taken)
+        exhausted = touched[self._counts[touched] == 0]
+        self._live.difference_update(int(u) for u in exhausted)
+        return ([int(u) for u in touched],
+                [int(c) for c in taken[touched]], nrows)
 
     def take_rowwise(self, buf: np.ndarray, block: int
                      ) -> Tuple[List[int], List[int], int]:
-        """The legacy assembly: walk every user, pop row-by-row into
-        ``buf`` (assumed zeroed).  Kept as the synchronous baseline the
-        async pipeline is benchmarked against."""
-        touched: List[int] = []
-        counts: List[int] = []
-        n = 0
-        for u, q in enumerate(self.queues):
-            if not q:
-                continue
-            k = min(block, len(q))
-            for b in range(k):
-                buf[u, b] = q.popleft()
-            touched.append(u)
-            counts.append(k)
-            n += k
-        self._n -= n
-        self._live = {u for u in self._live if self.queues[u]}
-        return touched, counts, n
+        """Legacy name for :meth:`take_block` (the assembly used to walk
+        every user popping row-by-row; it is now the same vectorized
+        scatter)."""
+        return self.take_block(buf, block)
 
     def take_user_into(self, user: int, buf: np.ndarray, at: int,
                        block: int) -> int:
         """Pop up to ``block - at`` rows of ``user`` into
         ``buf[user, at:]``; returns how many were taken."""
-        q = self.queues[user]
-        k = min(block - at, len(q))
-        if k <= 0:
-            return 0
-        buf[user, at:at + k] = [q.popleft() for _ in range(k)]
-        if not q:
-            self._live.discard(user)
-        self._n -= k
-        return k
+        base = np.full((self.S,), int(block), np.int64)
+        base[user] = int(at)
+        _, _, n = self.take_block(buf, block, base=base)
+        return n
 
     # -- persistence --------------------------------------------------------
 
     def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
         """Flat ``(pending_user, pending_rows)`` arrays — users walked in
         order, per-user FIFO preserved (the engine checkpoint format)."""
-        users: List[int] = []
-        rows: List[np.ndarray] = []
-        for u, q in enumerate(self.queues):
-            for r in q:
-                users.append(u)
-                rows.append(r)
-        return (np.asarray(users, np.int32),
-                np.stack(rows) if rows
-                else np.zeros((0, self.d), np.float32))
+        users, rows = self._pending_views()
+        if users.size == 0:
+            return (np.zeros((0,), np.int32),
+                    np.zeros((0, self.d), np.float32))
+        order = np.argsort(users, kind="stable")
+        return (np.ascontiguousarray(users[order], np.int32),
+                np.ascontiguousarray(rows[order], np.float32))
 
     def load(self, users: np.ndarray, rows: np.ndarray) -> None:
         """Refill from a :meth:`snapshot` pair (checkpoint restore).
         Bypasses the capacity bound: these rows were admitted once."""
-        for u, row in zip(users, rows):
-            u = int(u)
-            self.queues[u].append(np.ascontiguousarray(row, np.float32))
-            self._live.add(u)
-            self._n += 1
+        ua = np.asarray(users, np.int32).reshape(-1)
+        k = int(ua.size)
+        if k:
+            self._ensure(k)
+            self._ubuf[self._len:self._len + k] = ua
+            self._rbuf[self._len:self._len + k] = np.asarray(
+                rows, np.float32).reshape(k, self.d)
+            self._len += k
+            self._counts += np.bincount(ua, minlength=self.S)
+            self._live.update(int(u) for u in np.unique(ua))
         self.seq += 1
 
 
 class SyncIngest:
     """The pre-pipeline ingest path: assemble a fresh host slab at
-    dispatch time, row-by-row, and let the jitted update transfer it.
-    Zero buffering between ``submit`` and device state."""
+    dispatch time (one vectorized scatter) and let the jitted update
+    transfer it.  Zero buffering between ``submit`` and device state."""
 
     mode = "sync"
 
@@ -249,8 +425,10 @@ class SyncIngest:
 
     def next_slab(self) -> Tuple[Any, List[int], int]:
         q = self.queue
+        if q.backlog == 0:            # idle tick: no slab, no allocation
+            return None, [], 0
         slab = np.zeros((q.S, self.block, q.d), np.float32)
-        touched, _, nrows = q.take_rowwise(slab, self.block)
+        touched, _, nrows = q.take_block(slab, self.block)
         return slab, touched, nrows
 
     def after_dispatch(self, consumed: Any = None) -> None:
@@ -281,7 +459,9 @@ class AsyncIngest:
         self._put = put
         shape = (queue.S, block, queue.d)
         self._bufs = [np.zeros(shape, np.float32) for _ in range(2)]
-        self._dirty: List[List[Tuple[int, int]]] = [[], []]
+        # per-buffer array of stream ids whose (block, d) rows were
+        # written last pack — zeroed wholesale before the next pack
+        self._dirty: List[np.ndarray] = [np.zeros((0,), np.int64)] * 2
         self._cur = 0                              # next buffer to pack
         # (buf index, device slab, touched, counts, nrows, queue seq at
         # staging time — unchanged seq ⇒ the staged slab is still exact)
@@ -296,17 +476,10 @@ class AsyncIngest:
 
     def _assemble(self, i: int) -> Tuple[List[int], List[int], int]:
         buf = self._bufs[i]
-        for u, k in self._dirty[i]:
-            buf[u, :k] = 0.0
-        touched: List[int] = []
-        counts: List[int] = []
-        nrows = 0
-        for u in self.queue.live_users():
-            k = self.queue.take_user_into(u, buf, 0, self.block)
-            touched.append(u)
-            counts.append(k)
-            nrows += k
-        self._dirty[i] = list(zip(touched, counts))
+        if self._dirty[i].size:
+            buf[self._dirty[i]] = 0.0
+        touched, counts, nrows = self.queue.take_block(buf, self.block)
+        self._dirty[i] = np.asarray(touched, np.int64)
         return touched, counts, nrows
 
     def _prefetch(self, i: int) -> Any:
@@ -339,19 +512,17 @@ class AsyncIngest:
         if self.queue.backlog and self.queue.seq != seq:
             # top-up: a synchronous tick would include rows submitted
             # after staging, up to `block` per user — match it exactly
-            k_of = dict(zip(touched, counts))
-            extra = 0
-            for u in self.queue.live_users():
-                got = self.queue.take_user_into(
-                    u, self._bufs[i], k_of.get(u, 0), self.block)
-                if got:
-                    k_of[u] = k_of.get(u, 0) + got
-                    extra += got
+            # with one base-offset scatter into the staged buffer
+            cnt = np.zeros((self.queue.S,), np.int64)
+            cnt[touched] = counts
+            t2, c2, extra = self.queue.take_block(self._bufs[i], self.block,
+                                                  base=cnt)
             if extra:
-                touched = sorted(k_of)
-                counts = [k_of[u] for u in touched]
+                cnt[t2] += c2
+                touched = [int(u) for u in np.flatnonzero(cnt)]
+                counts = [int(cnt[u]) for u in touched]
                 nrows += extra
-                self._dirty[i] = list(zip(touched, counts))
+                self._dirty[i] = np.asarray(touched, np.int64)
                 # the staged prefetch is stale; do NOT pay a second
                 # transfer here — hand back a private host copy and let
                 # the update transfer it at dispatch, exactly the sync

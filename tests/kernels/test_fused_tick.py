@@ -1,0 +1,98 @@
+"""The fused krylov-tick kernels (``repro.kernels.fused_tick``): interpret
+mode vs the pure-jnp ref on hostile (unaligned) shapes, numerical edge
+cases the dump loop actually hits (zero/near-zero buffers, rank-1
+inputs), and the vmap batching the fleet tick relies on.
+
+Run standalone in CI job 2 with ``REPRO_KERNEL_LOWERING=interpret`` so
+the Pallas kernel body (not the XLA ref fallback) is exercised on CPU.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.fused_tick.ops import fused_krylov_step, gram_power
+from repro.kernels.fused_tick.ref import fused_krylov_step_ref, gram_power_ref
+
+UNALIGNED_MD = [(1, 1), (3, 5), (7, 130), (9, 127), (13, 257)]
+
+
+@pytest.mark.parametrize("m,d", UNALIGNED_MD)
+def test_gram_power_oracle_unaligned(m, d):
+    rng = np.random.default_rng(m * d + 3)
+    D = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    lam, u = gram_power(D, iters=64, interpret=True)
+    lam_r, u_r = gram_power_ref(D, iters=64)
+    np.testing.assert_allclose(float(lam), float(lam_r), rtol=1e-4)
+    np.testing.assert_allclose(np.abs(np.asarray(u)),
+                               np.abs(np.asarray(u_r)), atol=1e-3)
+    # λ̂ is a genuine Rayleigh quotient of K = DDᵀ
+    K = np.asarray(D, np.float64) @ np.asarray(D, np.float64).T
+    top = np.linalg.eigvalsh(K).max() if m else 0.0
+    assert float(lam) <= top * (1 + 1e-4) + 1e-6
+
+
+@pytest.mark.parametrize("m,d", UNALIGNED_MD)
+def test_fused_step_oracle_unaligned(m, d):
+    rng = np.random.default_rng(m + 2 * d)
+    D = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    lam, u = gram_power_ref(D, iters=64)
+    got = fused_krylov_step(D, lam, u, iters=64, interpret=True)
+    want = fused_krylov_step_ref(D, lam, u, iters=64)
+    scale = max(float(jnp.max(jnp.abs(D))) ** 2, 1.0)
+    for g, w, name in zip(got, want, ["snap", "D'", "lam'", "u'"]):
+        g, w = np.asarray(g), np.asarray(w)
+        if name == "u'":                   # eigenvector sign is arbitrary
+            g, w = np.abs(g), np.abs(w)
+        np.testing.assert_allclose(g, w, rtol=2e-4, atol=2e-4 * scale,
+                                   err_msg=name)
+
+
+def test_fused_step_removes_top_direction():
+    """After one fused step the snapshot carries σ₁v₁ and the downdated
+    buffer has lost that direction: λ' ≤ λ₂(K) + tol."""
+    rng = np.random.default_rng(5)
+    D = rng.normal(size=(10, 40)).astype(np.float32)
+    D[0] *= 6.0                                    # strong top direction
+    Dj = jnp.asarray(D)
+    lam, u = gram_power(Dj, iters=96, interpret=True)
+    snap, D2, lam2, _u2 = fused_krylov_step(Dj, lam, u, iters=96,
+                                            interpret=True)
+    evals = np.linalg.eigvalsh(D.astype(np.float64) @ D.T.astype(np.float64))
+    np.testing.assert_allclose(float(lam), evals[-1], rtol=1e-3)
+    assert float(lam2) <= evals[-2] * (1 + 1e-3) + 1e-3
+    # the snapshot's energy is exactly λ (σ₁v₁ with ‖v₁‖=1)
+    np.testing.assert_allclose(float(jnp.sum(snap * snap)), float(lam),
+                               rtol=1e-4)
+
+
+def test_gram_power_zero_buffer_is_finite():
+    """An empty (all-zero) sketch buffer must yield λ = 0 and a finite u —
+    the while-loop guard `lam >= theta` then exits without a dump."""
+    D = jnp.zeros((8, 32), jnp.float32)
+    for lam, u in (gram_power(D, interpret=True), gram_power_ref(D)):
+        assert float(lam) == 0.0
+        assert bool(jnp.all(jnp.isfinite(u)))
+    snap, D2, lam2, u2 = fused_krylov_step(
+        D, jnp.zeros(()), jnp.zeros((8,)), interpret=True)
+    for x in (snap, D2, lam2, u2):
+        assert bool(jnp.all(jnp.isfinite(x)))
+
+
+def test_fused_step_vmap_batches_cleanly():
+    """vmap of the fused step = one batched launch; per-lane results must
+    equal the per-example calls (the fleet-tick lowering contract)."""
+    rng = np.random.default_rng(6)
+    Db = jnp.asarray(rng.normal(size=(5, 6, 24)), jnp.float32)
+    lam, u = jax.vmap(lambda D: gram_power(D, iters=48, interpret=True))(Db)
+    outs = jax.vmap(lambda D, l, u: fused_krylov_step(D, l, u, iters=48,
+                                                      interpret=True))(
+        Db, lam, u)
+    for b in range(Db.shape[0]):
+        lam1, u1 = gram_power(Db[b], iters=48, interpret=True)
+        np.testing.assert_allclose(float(lam[b]), float(lam1), rtol=1e-5)
+        one = fused_krylov_step(Db[b], lam1, u1, iters=48, interpret=True)
+        for g, w in zip(outs, one):
+            np.testing.assert_allclose(np.asarray(g[b]), np.asarray(w),
+                                       rtol=1e-4, atol=1e-4)

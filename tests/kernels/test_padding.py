@@ -1,0 +1,102 @@
+"""Padding regression suite: the kernel wrappers zero-pad inputs to block
+multiples before ``pallas_call`` — these tests pin that a padded zero
+row/column can NEVER leak into the result.
+
+The sharp case is power iteration: padding K (m, m) to (m', m') appends
+zero rows/columns, so the padded coordinates of every iterate map to
+exactly 0 after one multiply — a padded slot must never "capture" the
+top eigenvector, even when the spectrum is near-degenerate and m is not
+a multiple of the 8-row sublane.  If it did, the sliced-back û would
+lose norm (mass stranded in the padding) or λ̂ would collapse.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.fused_tick.ops import gram_power
+from repro.kernels.gram.ops import gram
+from repro.kernels.power_iter.ops import power_iter
+from repro.kernels.window_gram.ops import window_gram
+
+UNALIGNED_M = [1, 3, 7, 9, 13, 31]                # all pad m → mult of 8
+
+
+def _near_degenerate_K(m, gap, seed):
+    """PSD (m, m) with λ₁ = 1 and λ₂ = 1 - gap (gap can be tiny/zero)."""
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.normal(size=(m, m)))
+    evals = np.linspace(0.1, 1.0 - gap, m) if m > 1 else np.array([1.0])
+    if m > 1:
+        evals[-1] = 1.0
+        evals[-2] = 1.0 - gap
+    K = (Q * evals) @ Q.T
+    return np.ascontiguousarray(K, np.float32), evals
+
+
+@pytest.mark.parametrize("m", UNALIGNED_M)
+@pytest.mark.parametrize("gap", [0.3, 1e-3, 0.0])
+def test_power_iter_padding_never_captures_top_eigvec(m, gap):
+    K, evals = _near_degenerate_K(m, gap, seed=m)
+    lam, u = power_iter(jnp.asarray(K), iters=256, interpret=True)
+    u = np.asarray(u, np.float64)
+    # 1. no mass stranded in the padding: the sliced û is unit-norm
+    np.testing.assert_allclose(np.linalg.norm(u), 1.0, rtol=1e-5)
+    # 2. λ̂ is the top eigenvalue, not a padded-zero eigenvalue
+    np.testing.assert_allclose(float(lam), evals[-1], rtol=5e-3)
+    # 3. û is an actual eigenvector of the UNPADDED K (residual test —
+    #    robust even when λ₁ ≈ λ₂ and the eigenbasis is ill-conditioned:
+    #    any unit vector in the top eigenspace passes, a padded axis
+    #    cannot)
+    resid = np.linalg.norm(K.astype(np.float64) @ u - float(lam) * u)
+    tol = 5e-3 if gap >= 1e-3 else 0.2 * evals[-1]
+    assert resid <= max(tol, np.sqrt(gap) + 5e-3), (resid, gap)
+
+
+@pytest.mark.parametrize("m", UNALIGNED_M)
+def test_power_iter_tiny_spectrum_beats_padded_zeros(m):
+    """Eigenvalues ≪ 1 are still larger than the padded block's exact
+    zeros — the iterate must stay on the real coordinates."""
+    K, evals = _near_degenerate_K(m, 0.5, seed=100 + m)
+    K *= 1e-6
+    lam, u = power_iter(jnp.asarray(K), iters=256, interpret=True)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(u)), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(float(lam), 1e-6 * evals[-1], rtol=5e-3)
+
+
+@pytest.mark.parametrize("m,d", [(3, 5), (7, 130), (9, 127), (13, 257)])
+def test_gram_padding_is_exact(m, d):
+    """Zero-padding rows/cols of x is exact for K = x xᵀ (padded dims
+    contribute 0) — d deliberately not a multiple of the lane/block."""
+    rng = np.random.default_rng(m * d)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    got = np.asarray(gram(jnp.asarray(x), interpret=True))
+    want = x.astype(np.float64) @ x.T.astype(np.float64)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * d)
+
+
+@pytest.mark.parametrize("n,d", [(7, 3), (9, 130), (129, 127)])
+def test_window_gram_padding_is_exact(n, d):
+    rng = np.random.default_rng(n + d)
+    A = rng.normal(size=(n, d)).astype(np.float32)
+    got = np.asarray(window_gram(jnp.asarray(A), interpret=True))
+    want = A.T.astype(np.float64) @ A.astype(np.float64)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * n)
+
+
+@pytest.mark.parametrize("m,d", [(3, 5), (7, 130), (13, 257)])
+def test_gram_power_padding_never_captures_top_eigvec(m, d):
+    """The fused kernel pads BOTH m and d; the combined padding must be
+    exact end-to-end: λ̂/û of the padded D match eigh of the unpadded
+    Gram."""
+    rng = np.random.default_rng(m + d)
+    D = rng.normal(size=(m, d)).astype(np.float32)
+    D[0] *= 4.0                                 # make the gap healthy
+    lam, u = gram_power(jnp.asarray(D), iters=256, interpret=True)
+    u = np.asarray(u, np.float64)
+    K = D.astype(np.float64) @ D.T.astype(np.float64)
+    evals = np.linalg.eigvalsh(K)
+    np.testing.assert_allclose(np.linalg.norm(u), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(lam), evals[-1], rtol=5e-3)
+    resid = np.linalg.norm(K @ u - float(lam) * u)
+    assert resid <= 5e-3 * max(evals[-1], 1.0)

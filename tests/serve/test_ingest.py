@@ -511,3 +511,129 @@ def test_async_ingest_two_forced_devices_subprocess():
                          env=env)
     assert res.returncode == 0, res.stderr[-3000:]
     assert "TWO-DEV-IDENTICAL" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Batched admission + the vectorized slab packer
+# ---------------------------------------------------------------------------
+
+
+def test_submit_many_matches_per_row_submits():
+    """The zero-copy batched packer contract: a ``submit_many`` batch is
+    bit-identical — fleet state, clock, queries — to submitting the same
+    rows one by one in the same order."""
+    X = _rows(3 * BLOCK, seed=5)
+    eng_a, eng_b = _engine(), _engine()
+    for i in range(2 * BLOCK):                    # per-row path
+        for u in range(S):
+            eng_a.submit(u, X[u, i])
+    users = np.concatenate(
+        [np.arange(S, dtype=np.int64)] * (2 * BLOCK))
+    rows = np.concatenate(
+        [X[:, i] for i in range(2 * BLOCK)], axis=0)
+    mask = eng_b.submit_many(users, rows)         # batched path
+    assert mask.shape == (users.size,) and mask.all()
+    assert eng_a.backlog == eng_b.backlog
+    eng_a.run(); eng_b.run()
+    # interleave: batch mid-stream between steps
+    eng_a.submit(1, X[1, 2 * BLOCK]); eng_a.submit(3, X[3, 2 * BLOCK])
+    eng_b.submit_many(np.array([1, 3]), X[[1, 3], 2 * BLOCK])
+    eng_a.run(); eng_b.run()
+    assert eng_a.t == eng_b.t
+    for la, lb in zip(jax.tree.leaves(eng_a.state),
+                      jax.tree.leaves(eng_b.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(eng_a.query_user(1), eng_b.query_user(1))
+
+
+def test_submit_many_validation_admits_nothing_on_error():
+    eng = _engine()
+    good = np.zeros((2, D), np.float32)
+    with pytest.raises(ValueError, match=rf"user id {S} .*\[0, {S}\)"):
+        eng.submit_many(np.array([0, S]), good)
+    with pytest.raises(ValueError, match=r"user id -2 "):
+        eng.submit_many(np.array([-2, 1]), good)
+    with pytest.raises(ValueError, match="1-D integer array"):
+        eng.submit_many(np.array([0.5, 1.5]), good)
+    with pytest.raises(ValueError, match="1-D integer array"):
+        eng.submit_many(np.array([[0], [1]]), good)
+    with pytest.raises(ValueError, match=rf"expected \(2, {D}\)"):
+        eng.submit_many(np.array([0, 1]), np.zeros((2, D + 1), np.float32))
+    with pytest.raises(ValueError, match="not real-numeric"):
+        eng.submit_many(np.array([0, 1]), np.zeros((2, D), np.complex64))
+    assert eng.backlog == 0                       # nothing was admitted
+    assert eng.submit_many(np.array([], np.int64),
+                           np.zeros((0, D), np.float32)).size == 0
+
+
+def test_submit_many_capacity_prefix_accept():
+    """At ``queue_capacity`` the longest fitting prefix is admitted and
+    the mask says exactly which rows got in (resubmit the rest later)."""
+    X = _rows(6, seed=6)
+    eng = _engine(queue_capacity=5)
+    users = np.zeros((8,), np.int64)
+    rows = np.stack([X[0, i % 6] for i in range(8)])
+    mask = eng.submit_many(users, rows)
+    np.testing.assert_array_equal(mask, [True] * 5 + [False] * 3)
+    assert eng.backlog == 5
+    mask2 = eng.submit_many(users[:2], rows[:2])  # full → all deferred
+    assert not mask2.any() and eng.backlog == 5
+    eng.run()
+    assert eng.submit_many(users[:2], rows[:2]).all()
+
+
+def test_submit_many_preserves_per_user_fifo():
+    q = AdmissionQueue(S, D)
+    r = _rows(4, seed=7)
+    q.submit(2, r[2, 0])
+    q.submit_many(np.array([2, 0, 2]), np.stack([r[2, 1], r[0, 0], r[2, 2]]))
+    buf = np.zeros((S, BLOCK, D), np.float32)
+    touched, counts, n = q.take_block(buf, BLOCK)
+    assert (touched, counts, n) == ([0, 2], [1, 3], 4)
+    np.testing.assert_array_equal(buf[2, :3], r[2, :3])   # FIFO order
+    np.testing.assert_array_equal(buf[0, 0], r[0, 0])
+    assert q.backlog == 0 and q.live_users() == []
+
+
+def test_take_block_base_offsets_write_past_existing_rows():
+    q = AdmissionQueue(S, D)
+    r = _rows(4, seed=8)
+    q.submit_many(np.array([1, 1, 1, 3]),
+                  np.stack([r[1, 0], r[1, 1], r[1, 2], r[3, 0]]))
+    buf = np.zeros((S, BLOCK, D), np.float32)
+    base = np.zeros((S,), np.int64)
+    base[1] = 2                                   # user 1 already has 2 rows
+    base[3] = BLOCK                               # user 3's slot is full
+    touched, counts, n = q.take_block(buf, BLOCK, base=base)
+    assert (touched, counts, n) == ([1], [2], 2)
+    np.testing.assert_array_equal(buf[1, 2], r[1, 0])
+    np.testing.assert_array_equal(buf[1, 3], r[1, 1])
+    assert np.all(buf[3] == 0)                    # full slot untouched
+    assert q.backlog == 2                         # r[1,2] and r[3,0] remain
+    assert q.live_users() == [1, 3]               # incremental set correct
+
+
+def test_push_front_without_headroom_preserves_fifo():
+    """push_front when the pool has no consumed prefix to reuse (the
+    reallocation path) must still put the rows ahead of queued ones."""
+    q = AdmissionQueue(S, D)
+    r = _rows(6, seed=9)
+    q.submit_many(np.full((3,), 1, np.int64), r[1, :3])
+    buf = np.zeros((S, BLOCK, D), np.float32)
+    q.take_block(buf, BLOCK)                      # pool compacts to start=0
+    q.submit(1, r[1, 3])                          # one queued row
+    q.push_front(1, [r[1, 0], r[1, 1]])           # unwind two rows
+    users, rows = q.snapshot()
+    np.testing.assert_array_equal(users, [1, 1, 1])
+    np.testing.assert_array_equal(rows, np.stack([r[1, 0], r[1, 1], r[1, 3]]))
+
+
+def test_queues_property_is_a_fifo_view():
+    q = AdmissionQueue(S, D)
+    r = _rows(3, seed=10)
+    q.submit_many(np.array([2, 0, 2]), np.stack([r[2, 0], r[0, 0], r[2, 1]]))
+    qs = q.queues
+    assert [len(x) for x in qs] == [1, 0, 2, 0]
+    np.testing.assert_array_equal(np.stack(list(qs[2])), r[2, :2])
+    qs[2].clear()                                 # mutating the view...
+    assert q.backlog == 3                         # ...does not touch the pool
