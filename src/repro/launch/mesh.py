@@ -36,3 +36,15 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
 def make_host_mesh():
     """All local devices on 'data', no model parallelism."""
     return make_mesh_compat((len(jax.devices()), 1), ("data", "model"))
+
+
+def make_local_mesh(axis: str = "streams"):
+    """1-D mesh over THIS process's devices only (``jax.local_devices()``)
+    — the default fleet mesh.  Unlike ``make_mesh_compat`` (which fills
+    from the global device list), this can never silently span another
+    process's devices: multi-process fleets get one per-process mesh
+    each, coordinated by ``repro.parallel.topology.FleetTopology``."""
+    import numpy as np
+
+    devices = np.asarray(jax.local_devices())
+    return jax.sharding.Mesh(devices, (axis,), **_axis_type_kw(1))

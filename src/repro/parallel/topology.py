@@ -1,0 +1,562 @@
+"""Fleet topology: multi-host sharding along the AggTree.
+
+One process's devices hold one fleet; the ROADMAP's north star is more
+streams than that.  This module is the layer that splits a fleet of S
+streams across P processes *along the query plane's own merge tree*:
+
+``partition_streams(S, P)``
+    P contiguous ``[lo, hi)`` ranges covering ``[0, S)``, every one of
+    them a **canonical node** of the global ``AggTree`` (the partition is
+    produced by repeatedly midpoint-splitting the widest range, i.e. by
+    descending the same ``mid = (lo+hi)//2`` recursion the tree uses).
+    That alignment is the whole design: everything below a process's
+    range is a subtree it can answer locally, and only the O(log S)
+    nodes *above* the partition — the top spine — ever involve another
+    process.
+
+``FleetTopology``
+    The per-process view: which range this process owns (defaults wired
+    to ``jax.process_count()`` / ``jax.process_index()`` after
+    ``jax.distributed.initialize``), ownership lookups for ingest
+    routing, and a :class:`Transport` for moving compressed node states
+    between processes.
+
+``PartitionedAggTree``
+    The distributed query plane.  Each process runs a *local*
+    :class:`~repro.sketch.query.AggTree` over its own ``[0, hi-lo)``
+    shard — bit-identical to the corresponding global subtree, because a
+    canonical node's midpoint split satisfies ``(lo+hi)//2 - lo ==
+    (hi-lo)//2`` (the local tree is the global subtree shifted by
+    ``lo``).  ``query(state, cohort, t)`` decomposes the cohort with the
+    SAME :func:`~repro.sketch.query.canonical_cover` recursion as the
+    single-process tree, serves owned nodes from the local tree,
+    exchanges only non-owned canonical nodes as compressed base-variant
+    states (FD mergeability — Liberty 2013 — is what makes a ``2ℓ×d``
+    node state a faithful proxy for all the raw rows below it), and
+    folds the spine in the single-process association order — so the
+    answer is **bit-identical** to the one fleet nobody ever split.
+
+Collective contract: ``query`` is a collective — every process must
+issue the same ``query``/``advance`` sequence in the same order (the
+engine's tick loop does this naturally).  Each process publishes the
+owned nodes a query needs *before* fetching any remote one, so matched
+collectives cannot deadlock; a mismatched schedule fails loudly with a
+transport timeout, never a silent stale answer (node keys are
+versioned by the advance counter and tagged with the query time).
+
+Transports are deliberately tiny — publish/fetch of immutable bytes
+keyed by strings: ``CoordTransport`` rides the ``jax.distributed``
+coordination-service KV store (no extra dependency, works on CPU),
+``DirTransport`` uses a shared directory (atomic rename), and
+``MemTransport`` is an in-process dict for thread-based tests.
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.sketch.query import ALL, AggTree, as_cohort, canonical_cover
+
+__all__ = ["CoordTransport", "DirTransport", "FleetTopology",
+           "MemTransport", "OwnershipError", "PartitionedAggTree",
+           "partition_streams"]
+
+
+class OwnershipError(ValueError):
+    """A stream id was routed to a process that does not own it."""
+
+
+# ---------------------------------------------------------------------------
+# AggTree-aligned partitioning
+# ---------------------------------------------------------------------------
+
+
+def partition_streams(streams: int, parts: int) -> Tuple[Tuple[int, int], ...]:
+    """Split ``[0, streams)`` into ``parts`` contiguous ranges, each a
+    canonical node of the global AggTree.
+
+    Deterministic: repeatedly midpoint-split the widest range (leftmost on
+    ties) — exactly the tree's own ``mid = (lo+hi)//2`` descent, so every
+    produced range is reachable by canonical splits from the root.  For
+    power-of-two ``streams`` and ``parts`` this is the even split
+    (``partition_streams(8, 2) == ((0, 4), (4, 8))``); otherwise widths
+    differ by at most a factor of two.
+    """
+    S, P = int(streams), int(parts)
+    if S < 1:
+        raise ValueError(f"fleet size {streams} < 1")
+    if not (1 <= P <= S):
+        raise ValueError(
+            f"cannot split {S} streams across {P} processes "
+            f"(need 1 <= processes <= streams)")
+    ranges: List[Tuple[int, int]] = [(0, S)]
+    while len(ranges) < P:
+        i = max(range(len(ranges)),
+                key=lambda j: ranges[j][1] - ranges[j][0])
+        lo, hi = ranges[i]
+        mid = (lo + hi) // 2
+        ranges[i:i + 1] = [(lo, mid), (mid, hi)]
+    return tuple(ranges)
+
+
+# ---------------------------------------------------------------------------
+# Transports — publish/fetch of immutable bytes
+# ---------------------------------------------------------------------------
+
+
+class MemTransport:
+    """In-process transport for thread-based multi-\"process\" tests.
+
+    Share ONE instance between the threads standing in for processes.
+    ``publish`` is first-write-wins (published values are deterministic
+    across processes, so a duplicate is a no-op, not a conflict).
+    """
+
+    def __init__(self):
+        self._data: Dict[str, bytes] = {}
+        self._cv = threading.Condition()
+
+    def publish(self, key: str, data: bytes) -> None:
+        with self._cv:
+            self._data.setdefault(key, bytes(data))
+            self._cv.notify_all()
+
+    def fetch(self, key: str, timeout: float) -> bytes:
+        with self._cv:
+            if not self._cv.wait_for(lambda: key in self._data,
+                                     timeout=timeout):
+                raise TimeoutError(_timeout_msg(key, timeout))
+            return self._data[key]
+
+
+class DirTransport:
+    """Shared-filesystem transport: one file per key under ``root``,
+    written tmp-then-rename so readers never observe a partial value."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key.replace("/", "__"))
+
+    def publish(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        if os.path.exists(path):
+            return
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)
+
+    def fetch(self, key: str, timeout: float) -> bytes:
+        path = self._path(key)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                with open(path, "rb") as f:
+                    return f.read()
+            except FileNotFoundError:
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(_timeout_msg(key, timeout)) from None
+                time.sleep(0.01)
+
+
+class CoordTransport:
+    """``jax.distributed`` coordination-service KV transport.
+
+    Requires ``jax.distributed.initialize`` to have run; values are
+    base64-encoded into the coordinator's string KV store.  This is the
+    default transport of a multi-process :class:`FleetTopology` — node
+    states are small (``O(2ℓ×d)``), so the coordinator is plenty.
+    """
+
+    def __init__(self, client=None, prefix: str = "repro-fleet"):
+        if client is None:
+            client = _coordination_client()
+            if client is None:
+                raise RuntimeError(
+                    "CoordTransport needs an initialized jax.distributed "
+                    "runtime — call jax.distributed.initialize(...) first, "
+                    "or pass an explicit transport (DirTransport/"
+                    "MemTransport) to FleetTopology")
+        self._client = client
+        self._prefix = str(prefix)
+        self._seen: set = set()
+
+    def _key(self, key: str) -> str:
+        return f"{self._prefix}/{key}"
+
+    def publish(self, key: str, data: bytes) -> None:
+        import base64
+
+        if key in self._seen:
+            return
+        try:
+            self._client.key_value_set(
+                self._key(key), base64.b64encode(data).decode("ascii"))
+        except Exception as e:                  # duplicate set: first wins
+            if "already exists" not in str(e).lower():
+                raise
+        self._seen.add(key)
+
+    def fetch(self, key: str, timeout: float) -> bytes:
+        import base64
+
+        try:
+            val = self._client.blocking_key_value_get(
+                self._key(key), int(timeout * 1000))
+        except Exception as e:
+            raise TimeoutError(_timeout_msg(key, timeout)) from e
+        return base64.b64decode(val.encode("ascii"))
+
+
+def _timeout_msg(key: str, timeout: float) -> str:
+    return (
+        f"timed out after {timeout:.0f}s waiting for fleet node {key!r}. "
+        "PartitionedAggTree queries are collectives: every process must "
+        "issue the same query/advance sequence in the same order (and be "
+        "alive).  A missing publisher usually means one process skipped a "
+        "query, stepped its engine a different number of times, or died.")
+
+
+def _coordination_client():
+    try:
+        from jax._src import distributed
+
+        return distributed.global_state.client
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Node-state serialization — the bytes that cross hosts
+# ---------------------------------------------------------------------------
+
+
+def pack_state(state) -> bytes:
+    """Serialize a base-variant state pytree's leaves (host order)."""
+    leaves = jax.tree.leaves(state)
+    buf = io.BytesIO()
+    np.savez(buf, **{f"leaf_{i:03d}": np.asarray(jax.device_get(x))
+                     for i, x in enumerate(leaves)})
+    return buf.getvalue()
+
+
+def unpack_state(data: bytes, template) -> Any:
+    """Rebuild a state pytree from :func:`pack_state` bytes against an
+    ``eval_shape`` template.  Shape/dtype drift raises — a remote node
+    that doesn't match the local sketch config is a correctness error
+    (config skew between processes), not a cache miss."""
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    with np.load(io.BytesIO(data)) as z:
+        leaves = []
+        for i, tl in enumerate(t_leaves):
+            arr = z[f"leaf_{i:03d}"]
+            if tuple(arr.shape) != tuple(tl.shape) or arr.dtype != tl.dtype:
+                raise ValueError(
+                    f"remote node leaf {i}: {arr.shape}/{arr.dtype} != "
+                    f"local template {tl.shape}/{tl.dtype} — sketch config "
+                    "skew between processes (every process must build the "
+                    "fleet with identical make_sketch arguments)")
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# FleetTopology — the per-process view of the partition
+# ---------------------------------------------------------------------------
+
+
+class FleetTopology:
+    """Assignment of a fleet's stream axis to processes, aligned to the
+    AggTree: process ``p`` owns the contiguous range
+    ``partition_streams(streams, num_processes)[p]`` — a canonical
+    subtree of the global merge tree.
+
+    Defaults come from the ``jax.distributed`` runtime
+    (``jax.process_count()`` / ``jax.process_index()``), so after
+    ``jax.distributed.initialize(...)`` a bare
+    ``FleetTopology(streams)`` on every process is a consistent
+    topology.  Pass ``num_processes`` / ``process_id`` / ``transport``
+    explicitly for single-process tests (threads standing in for
+    processes share a :class:`MemTransport`).
+
+    ``namespace`` isolates the transport keys of independent fleets
+    sharing one coordination service; ``timeout_s`` bounds every remote
+    node fetch (see the collective contract in the module docstring).
+    """
+
+    def __init__(self, streams: int, *, num_processes: Optional[int] = None,
+                 process_id: Optional[int] = None, transport=None,
+                 namespace: str = "fleet", timeout_s: float = 120.0):
+        if num_processes is None:
+            num_processes = jax.process_count()
+        if process_id is None:
+            process_id = jax.process_index()
+        self.S = int(streams)
+        self.P = int(num_processes)
+        self.pid = int(process_id)
+        if not (0 <= self.pid < self.P):
+            raise ValueError(
+                f"process_id {self.pid} outside [0, {self.P})")
+        self.ranges = partition_streams(self.S, self.P)
+        self.lo, self.hi = self.ranges[self.pid]
+        self.namespace = str(namespace)
+        self.timeout_s = float(timeout_s)
+        if transport is None:
+            transport = MemTransport() if self.P == 1 else CoordTransport()
+        self.transport = transport
+
+    # -- ownership ----------------------------------------------------------
+
+    @property
+    def local_size(self) -> int:
+        return self.hi - self.lo
+
+    def owner_of(self, stream: int) -> int:
+        """The process id owning ``stream`` (ValueError if out of range)."""
+        s = int(stream)
+        if not (0 <= s < self.S):
+            raise ValueError(f"stream {s} outside fleet [0, {self.S})")
+        import bisect
+
+        return bisect.bisect_right([lo for lo, _ in self.ranges], s) - 1
+
+    def owner_of_range(self, lo: int, hi: int) -> Optional[int]:
+        """The single process owning ALL of ``[lo, hi)``, or ``None`` when
+        the range crosses an ownership boundary (a spine range)."""
+        p = self.owner_of(lo)
+        return p if hi <= self.ranges[p][1] else None
+
+    def is_local(self, stream: int) -> bool:
+        return self.lo <= int(stream) < self.hi
+
+    def to_local(self, stream: int) -> int:
+        """Map a global stream id into this process's ``[0, local_size)``
+        (``OwnershipError`` when not owned, naming the owner)."""
+        s = int(stream)
+        if not self.is_local(s):
+            owner = self.owner_of(s)
+            raise OwnershipError(
+                f"stream {s} is owned by process {owner} (range "
+                f"{list(self.ranges[owner])}); this is process {self.pid} "
+                f"owning [{self.lo}, {self.hi}) — route the request to its "
+                "owner")
+        return s - self.lo
+
+    def barrier(self, name: str) -> None:
+        """Transport-level barrier: every process publishes its arrival
+        and waits for all others (used around checkpoint handoffs)."""
+        for p in range(self.P):
+            key = f"{self.namespace}/barrier/{name}/{p}"
+            if p == self.pid:
+                self.transport.publish(key, b"1")
+        for p in range(self.P):
+            if p != self.pid:
+                self.transport.fetch(f"{self.namespace}/barrier/{name}/{p}",
+                                     self.timeout_s)
+
+    def spec(self) -> Dict[str, Any]:
+        """JSON-serializable description for checkpoint manifests."""
+        return {"streams": self.S, "num_processes": self.P,
+                "process_id": self.pid, "range": [self.lo, self.hi],
+                "ranges": [[lo, hi] for lo, hi in self.ranges]}
+
+    def __repr__(self) -> str:
+        return (f"FleetTopology(S={self.S}, process {self.pid}/{self.P}, "
+                f"owns [{self.lo}, {self.hi}))")
+
+
+# ---------------------------------------------------------------------------
+# PartitionedAggTree — the distributed query plane
+# ---------------------------------------------------------------------------
+
+
+class PartitionedAggTree:
+    """The query plane of a topology-sharded fleet (see module docstring).
+
+    ``base`` is the per-stream sketch; ``state`` arguments are the LOCAL
+    fleet state (leading axis ``topology.local_size``).  ``query`` takes
+    GLOBAL cohorts and is a collective across processes; ``advance``
+    mirrors :meth:`AggTree.advance` with LOCAL touched indices and bumps
+    the version that scopes transport keys.
+
+    Counters: ``remote_fetches`` (non-owned canonical nodes pulled from
+    other processes), ``spine_merges`` (merges performed above the
+    ownership partition, including the cohort composition fold),
+    ``published`` (owned nodes pushed).  For any contiguous cohort each
+    is bounded by the canonical-cover bound ``2⌈log₂S⌉`` — the whole
+    point of sharding along the tree.
+    """
+
+    def __init__(self, base, topology: FleetTopology):
+        if base.meta.get("backend") != "jax":
+            raise ValueError(
+                f"PartitionedAggTree needs a JAX-backed base sketch, got "
+                f"{base.name!r}")
+        self.base = base
+        self.topo = topology
+        self.S = topology.S
+        self.local = AggTree(base, topology.local_size)
+        self.version = 0
+        self._template = None
+        self._leaf_ids: Optional[Tuple[int, ...]] = None
+        # (lo, hi) -> (tkey, state): fetched remote + computed spine nodes
+        self._nodes: Dict[Tuple[int, int], Tuple[Optional[int], Any]] = {}
+        self._results: Dict[Tuple, Any] = {}
+        self._published: set = set()
+        self.remote_fetches = 0
+        self.spine_merges = 0
+        self.published = 0
+        self.resets = 0
+
+    # -- cache lifecycle (mirrors AggTree's identity tracking) --------------
+
+    def _ids(self, state) -> Tuple[int, ...]:
+        return tuple(map(id, jax.tree.leaves(state)))
+
+    def _bump(self) -> None:
+        self.version += 1
+        self._nodes.clear()
+        self._results.clear()
+        self._published.clear()
+
+    def _sync(self, state) -> None:
+        ids = self._ids(state)
+        if self._leaf_ids is None:
+            self._leaf_ids = ids
+            return
+        if ids != self._leaf_ids:
+            self.resets += 1
+            self._bump()
+            self._leaf_ids = ids
+
+    def advance(self, state, touched=None) -> None:
+        """Announce a local ingest step (LOCAL ``touched`` indices).  This
+        is part of the collective schedule: every process advances once
+        per fleet tick, keeping the key-scoping version in lockstep."""
+        self._bump()
+        self._leaf_ids = self._ids(state)
+        self.local.advance(state, touched)
+
+    def reset(self) -> None:
+        self.resets += 1
+        self._bump()
+        self.local.reset()
+
+    # -- the collective query ----------------------------------------------
+
+    def query(self, state, cohort=ALL, t=None):
+        """Merged base-variant state over a GLOBAL ``cohort`` at ``t`` —
+        bit-identical to the single-process ``AggTree.query`` over the
+        unsplit fleet.  Collective: see the module docstring."""
+        self._sync(state)
+        cohort = as_cohort(cohort)
+        ranges = cohort.resolve(self.S)
+        tkey = None if t is None else int(t)
+        rkey = (ranges, tkey)
+        hit = self._results.get(rkey)
+        if hit is not None:
+            return hit
+        segs: List[Tuple[int, int]] = []
+        for lo, hi in ranges:
+            canonical_cover(0, self.S, lo, hi, segs)
+        # publish-before-fetch: push every owned atom this query needs,
+        # THEN resolve the spine — matched collectives cannot deadlock
+        atoms: List[Tuple[int, int]] = []
+        for lo, hi in segs:
+            self._atoms(lo, hi, atoms)
+        for lo, hi in atoms:
+            if self.topo.owner_of_range(lo, hi) == self.topo.pid:
+                self._publish(state, lo, hi, t, tkey)
+        acc = None
+        for lo, hi in segs:
+            node = self._node(state, lo, hi, t, tkey)
+            if acc is None:
+                acc = node
+            else:
+                acc = self._merge2(acc, node, t)
+        if len(self._results) >= 4096:
+            self._results.clear()
+        self._results[rkey] = acc
+        return acc
+
+    def _atoms(self, lo: int, hi: int, out: List[Tuple[int, int]]) -> None:
+        """Split a canonical range at ownership boundaries into the
+        maximal single-owner canonical nodes under it."""
+        if self.topo.owner_of_range(lo, hi) is not None:
+            out.append((lo, hi))
+            return
+        mid = (lo + hi) // 2
+        self._atoms(lo, mid, out)
+        self._atoms(mid, hi, out)
+
+    def _node(self, state, lo: int, hi: int, t, tkey):
+        owner = self.topo.owner_of_range(lo, hi)
+        if owner == self.topo.pid:          # owned subtree: serve locally
+            return self.local.node(state, lo - self.topo.lo,
+                                   hi - self.topo.lo, t)
+        ent = self._nodes.get((lo, hi))
+        if ent is not None and ent[0] == tkey:
+            return ent[1]
+        if owner is not None:               # another process's subtree
+            node = unpack_state(
+                self.topo.transport.fetch(self._key(lo, hi, tkey),
+                                          self.topo.timeout_s),
+                self._state_template())
+            self.remote_fetches += 1
+        else:                               # spine: recurse across owners
+            mid = (lo + hi) // 2
+            node = self._merge2(self._node(state, lo, mid, t, tkey),
+                                self._node(state, mid, hi, t, tkey), t)
+        self._nodes[(lo, hi)] = (tkey, node)
+        return node
+
+    def _publish(self, state, lo: int, hi: int, t, tkey) -> None:
+        key = self._key(lo, hi, tkey)
+        if key in self._published:
+            return
+        node = self.local.node(state, lo - self.topo.lo,
+                               hi - self.topo.lo, t)
+        self.topo.transport.publish(key, pack_state(node))
+        self._published.add(key)
+        self.published += 1
+
+    def _merge2(self, a, b, t):
+        self.spine_merges += 1
+        targ = None if t is None else jnp.asarray(int(t), jnp.int32)
+        return self.local._jmerge(a, b, targ)
+
+    def _key(self, lo: int, hi: int, tkey) -> str:
+        return (f"{self.topo.namespace}/v{self.version}/t{tkey}/"
+                f"{lo:06d}-{hi:06d}")
+
+    def _state_template(self):
+        if self._template is None:
+            self._template = jax.eval_shape(lambda: self.base.init())
+        return self._template
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def merges(self) -> int:
+        """Total node merges this process performed (local + spine)."""
+        return self.local.merges + self.spine_merges
+
+    @property
+    def cached_nodes(self) -> int:
+        return self.local.cached_nodes + len(self._nodes)
+
+    def space(self) -> int:
+        return self.local.space() + int(sum(
+            int(self.base.space(s)) for _, s in self._nodes.values()))

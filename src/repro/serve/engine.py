@@ -192,6 +192,22 @@ class SketchFleetEngine:
     window content).  Wall-clock-driven time-based deployments that want
     idle ticks to age windows out opt in with ``step(advance_time=True)``.
 
+    Ownership routing (multi-host fleets): pass ``topology`` (a
+    :class:`repro.parallel.topology.FleetTopology`) and this engine holds
+    only the contiguous stream range the topology assigns to this
+    process.  ``submit``/``submit_many``/``query_user`` still speak
+    GLOBAL user ids: owned ids are mapped onto the local shard, a
+    non-owned id raises :class:`~repro.parallel.topology.OwnershipError`
+    naming the owning process and its range (``submit_many`` admits
+    nothing on a mixed batch) — the front-end routes the request to that
+    process instead.  ``query_cohort``/``query_global`` are collectives:
+    every process must issue the same query sequence between the same
+    ticks (owned subtrees answer locally; only O(log S) compressed spine
+    nodes cross processes — see ``repro.parallel.topology``).
+    ``checkpoint`` writes this process's shard manifest; restoring with
+    a different process count is supported (``from_checkpoint(...,
+    topology=...)`` slices its range from whatever shards it finds).
+
     Queries (the query plane, ``repro.sketch.query``):
       * ``query_user(u)``    — that user's compressed (2ℓ, d) window sketch.
       * ``query_cohort(c)``  — ONE compressed sketch over any cohort of
@@ -208,12 +224,17 @@ class SketchFleetEngine:
     def __init__(self, name: str = "dsfd", *, d: int, streams: int,
                  eps: float = 1 / 8, window: int = 1024, block: int = 8,
                  mesh=None, ingest: str = "async",
-                 queue_capacity: Optional[int] = None, **hyper):
+                 queue_capacity: Optional[int] = None, topology=None,
+                 **hyper):
         from repro.sketch.api import agg_tree, make_sketch, shard_streams
 
         self.base = make_sketch(name, d=d, eps=eps, window=window, **hyper)
-        self.fleet = shard_streams(self.base, streams, mesh)
+        self.topology = topology
+        self.fleet = shard_streams(self.base, streams, mesh,
+                                   topology=topology)
         self.S, self.d, self.block = int(streams), int(d), int(block)
+        self.S_local = (int(topology.local_size) if topology is not None
+                        else self.S)
         self.state = self.fleet.init()
         self.t = 0                                  # fleet clock (ticks)
         self.rows_ingested = 0
@@ -232,7 +253,7 @@ class SketchFleetEngine:
         put = (jax.device_put if sharding is None
                else (lambda slab: jax.device_put(slab, sharding)))
         self.ingest = mode
-        self.queue = AdmissionQueue(self.S, self.d, capacity=capacity)
+        self.queue = AdmissionQueue(self.S_local, self.d, capacity=capacity)
         self.pipe = make_pipeline(mode, self.queue, block=self.block,
                                   put=put)
         self._zero_slab = None         # lazy zero slab for idle ticks
@@ -273,9 +294,20 @@ class SketchFleetEngine:
 
         self.pipe.flush_to_queue()
         users, rows = self.queue.snapshot()
+        if self.topology is not None:
+            # pending ids are persisted GLOBAL: the restoring process
+            # count (and hence the local index mapping) is not ours to
+            # assume — from_checkpoint filters by its own ownership
+            users = (users + np.int32(self.topology.lo)).astype(np.int32)
         aux = {"pending_user": users, "pending_rows": rows}
-        tree_meta, tree_arrays = self.tree.state_dict(t=self.t)
-        aux.update(tree_arrays)
+        if self.topology is None:
+            tree_meta, tree_arrays = self.tree.state_dict(t=self.t)
+            aux.update(tree_arrays)
+        else:
+            # the partitioned plane restarts cold: its node cache is
+            # scoped by transport version (a restart resets every
+            # process's version in lockstep) and rebuilds in O(local)
+            tree_meta = None
         # rows_ingested rides in the JSON spec (arbitrary-precision int —
         # an array leaf would be silently downcast by x64-disabled jax)
         return save_fleet(path, self.fleet, self.state, self.t, aux=aux,
@@ -289,7 +321,8 @@ class SketchFleetEngine:
 
     @classmethod
     def from_checkpoint(cls, path: str, mesh=None, *,
-                        step: Optional[int] = None) -> "SketchFleetEngine":
+                        step: Optional[int] = None,
+                        topology=None) -> "SketchFleetEngine":
         """Rebuild an engine from :meth:`checkpoint` — elastically.
 
         The sketch comes back from the registry via the checkpoint's
@@ -304,10 +337,19 @@ class SketchFleetEngine:
         queries after a restore are warm; any mismatch (older checkpoint
         format, config drift) silently falls back to a cold cache — the
         cache is an accelerator, never a correctness dependency.
+
+        Process elasticity: pass ``topology`` to restore one process's
+        shard of a multi-host engine — the save-time process count is
+        irrelevant (a plain checkpoint is sliced, shard checkpoints are
+        sliced-and-concatenated; see :func:`restore_fleet`).  Pending
+        rows are persisted with GLOBAL user ids, so each restoring
+        process keeps exactly the ones it now owns — nothing is lost or
+        duplicated across the fleet.  ``rows_ingested`` counts the whole
+        fleet's rows as of the save regardless of who saved.
         """
         from repro.sketch.api import agg_tree, restore_fleet
 
-        fc = restore_fleet(path, mesh, step=step)
+        fc = restore_fleet(path, mesh, step=step, topology=topology)
         ss = fc.manifest["sketch_spec"]
         espec = ss.get("engine")
         if espec is None:
@@ -321,7 +363,10 @@ class SketchFleetEngine:
         eng = cls.__new__(cls)
         eng.base = fc.fleet.meta["base"]
         eng.fleet = fc.fleet
+        eng.topology = topology
         eng.S = int(ss["streams"])
+        eng.S_local = (int(topology.local_size) if topology is not None
+                       else eng.S)
         eng.d = int(spec["d"])
         eng.block = int(espec["block"])
         eng.state = fc.state
@@ -332,28 +377,78 @@ class SketchFleetEngine:
         # either way — the pipeline is not part of the persisted state)
         eng._wire_ingest(espec.get("ingest", "async"),
                          espec.get("queue_capacity"))
-        eng.queue.load(fc.aux["pending_user"], fc.aux["pending_rows"])
+        users, rows = fc.aux["pending_user"], fc.aux["pending_rows"]
+        if topology is not None:
+            # shard checkpoints carry GLOBAL pending ids (possibly from a
+            # different process count): keep the ones this process now
+            # owns; sibling processes pick up the rest
+            users = np.asarray(users, np.int32).reshape(-1)
+            owned = (users >= topology.lo) & (users < topology.hi)
+            users = users[owned] - np.int32(topology.lo)
+            rows = np.asarray(rows)[owned]
+        eng.queue.load(users, rows)
         eng.tree = agg_tree(eng.fleet)
-        eng.tree.load_state_dict(espec.get("agg_tree"), fc.aux, eng.state)
+        if topology is None:
+            eng.tree.load_state_dict(espec.get("agg_tree"), fc.aux,
+                                     eng.state)
         return eng
 
     # -- admission ---------------------------------------------------------
 
+    def _route(self, user) -> int:
+        """Ownership routing: map a GLOBAL user id onto this process's
+        local shard (the identity for single-host engines).  Non-owned
+        ids raise ``OwnershipError`` naming the owner — the caller
+        should route the request to that process."""
+        if isinstance(user, bool) or not isinstance(user, (int, np.integer)):
+            raise ValueError(
+                f"user id must be an integer, got {type(user).__name__} "
+                f"({user!r})")
+        u = int(user)
+        if not 0 <= u < self.S:
+            raise ValueError(
+                f"user id {u} outside the fleet's [0, {self.S}) stream "
+                "range")
+        return u if self.topology is None else self.topology.to_local(u)
+
     def submit(self, user: int, row: np.ndarray) -> bool:
-        """Admit one row for ``user``; validated at admission (clear
-        ``ValueError`` instead of a late XLA shape error).  Returns
-        ``True`` (accepted) or ``False`` (deferred — the queue is at
-        ``queue_capacity``; drain with ``step``/``run`` and resubmit)."""
+        """Admit one row for ``user`` (a GLOBAL id); validated at
+        admission (clear ``ValueError`` instead of a late XLA shape
+        error; ``OwnershipError`` when a topology routes ``user`` to a
+        different process).  Returns ``True`` (accepted) or ``False``
+        (deferred — the queue is at ``queue_capacity``; drain with
+        ``step``/``run`` and resubmit)."""
+        if self.topology is not None:
+            user = self._route(user)
         return self.queue.submit(user, row)
 
     def submit_many(self, users, rows) -> np.ndarray:
-        """Batched admission: ``users`` (n,) int ids, ``rows`` (n, d)
-        float32 — one vectorized validation + one copy into the queue's
-        row pool, no per-row Python (see the class docstring).  Returns
-        an (n,) bool mask of accepted rows; at ``queue_capacity`` the
-        longest fitting prefix is admitted (resubmit the ``~mask``
-        suffix after a drain).  Malformed input raises ``ValueError``
-        with nothing admitted."""
+        """Batched admission: ``users`` (n,) int GLOBAL ids, ``rows``
+        (n, d) float32 — one vectorized validation + one copy into the
+        queue's row pool, no per-row Python (see the class docstring).
+        Returns an (n,) bool mask of accepted rows; at
+        ``queue_capacity`` the longest fitting prefix is admitted
+        (resubmit the ``~mask`` suffix after a drain).  Malformed input
+        raises ``ValueError`` with nothing admitted; under a topology a
+        batch containing any non-owned id raises ``OwnershipError``
+        with nothing admitted (split batches by owner upstream)."""
+        if self.topology is not None:
+            ua = np.asarray(users)
+            if ua.ndim != 1 or (ua.size
+                                and not np.issubdtype(ua.dtype, np.integer)):
+                raise ValueError(
+                    f"users must be a 1-D integer array, got shape "
+                    f"{ua.shape} dtype {ua.dtype}")
+            if ua.size:
+                bad = (ua < 0) | (ua >= self.S)
+                if bad.any():
+                    raise ValueError(
+                        f"user id {int(ua[bad][0])} outside the fleet's "
+                        f"[0, {self.S}) stream range")
+                owned = (ua >= self.topology.lo) & (ua < self.topology.hi)
+                if not owned.all():
+                    self.topology.to_local(int(ua[~owned][0]))  # raises
+            users = (ua - self.topology.lo).astype(ua.dtype, copy=False)
         return self.queue.submit_many(users, rows)
 
     @property
@@ -384,8 +479,8 @@ class SketchFleetEngine:
             return 0
         if nrows == 0:
             if self._zero_slab is None:
-                self._zero_slab = np.zeros((self.S, self.block, self.d),
-                                           np.float32)
+                self._zero_slab = np.zeros(
+                    (self.S_local, self.block, self.d), np.float32)
             slab = self._zero_slab
         ts = jnp.arange(self.t + 1, self.t + self.block + 1, dtype=jnp.int32)
         self.state = self.fleet.update_block(self.state, slab, ts)
@@ -429,6 +524,8 @@ class SketchFleetEngine:
     # -- queries -----------------------------------------------------------
 
     def query_user(self, user: int) -> np.ndarray:
+        if self.topology is not None:
+            user = self._route(user)
         one = jax.tree.map(lambda x: x[user], self.state)
         return np.asarray(self.base.query(one, self.t))
 

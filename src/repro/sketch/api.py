@@ -553,9 +553,11 @@ def query_cohort(fleet: SlidingSketch, state, cohort=ALL, t=None):
 
 
 def agg_tree(fleet: SlidingSketch) -> AggTree:
-    """The fleet's shared :class:`AggTree` (created lazily on first use) —
+    """The fleet's shared query-plane tree (created lazily on first use) —
     for cache accounting, targeted ``advance``/``dirty`` invalidation, and
-    checkpoint persistence of materialized nodes."""
+    checkpoint persistence of materialized nodes.  A plain fleet gets an
+    :class:`AggTree`; a topology-sharded fleet gets its collective
+    :class:`~repro.parallel.topology.PartitionedAggTree`."""
     box = fleet.meta.get("agg_box")
     if box is None:
         raise ValueError(
@@ -563,8 +565,14 @@ def agg_tree(fleet: SlidingSketch) -> AggTree:
             f"got {fleet.name!r}")
     tree = box.get("tree")
     if tree is None:
-        tree = box["tree"] = AggTree(fleet.meta["base"],
-                                     int(fleet.meta["streams"]))
+        topo = fleet.meta.get("topology")
+        if topo is not None:
+            from repro.parallel.topology import PartitionedAggTree
+            tree = box["tree"] = PartitionedAggTree(fleet.meta["base"],
+                                                    topo)
+        else:
+            tree = box["tree"] = AggTree(fleet.meta["base"],
+                                         int(fleet.meta["streams"]))
     return tree
 
 
@@ -578,24 +586,46 @@ def merge_streams(fleet: SlidingSketch, state, t=None):
     baseline).  Kept for import compatibility; new code should call
     :func:`query_cohort`.
     """
+    import warnings
+
+    warnings.warn(
+        "merge_streams(fleet, state, t) is deprecated — call "
+        "query_cohort(fleet, state, ALL, t) (same merged state, served "
+        "from the fleet's cached AggTree); the uncached O(S) reduction "
+        "lives on as repro.sketch.query.full_reduce_streams",
+        DeprecationWarning, stacklevel=2)
     return query_cohort(fleet, state, ALL, t)
 
 
 def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
-                  axis: str = "streams") -> SlidingSketch:
+                  axis: str = "streams", topology=None) -> SlidingSketch:
     """Lift a JAX-backed sketch to a device-sharded fleet of ``streams``.
 
     Built on :func:`vmap_streams`: every device of ``mesh`` (default: a 1-D
-    mesh over all local devices) owns ``streams / n_devices`` per-user
-    sketches and runs the same vmapped block scan on them — one
+    mesh over this process's local devices) owns ``streams / n_devices``
+    per-user sketches and runs the same vmapped block scan on them — one
     ``shard_map``'d SPMD program per ``update_block``, no cross-device
     traffic on the update path (streams are independent).  State leaves are
     sharded along their leading ``(S, ...)`` stream axis; ``init`` returns
     the state already placed.  Aggregate (cross-shard) queries go through
-    :func:`merge_streams`, whose upper tree-reduction rounds are where the
+    :func:`query_cohort`, whose upper tree-merge rounds are where the
     collective traffic lives.
 
     ``streams`` must be a multiple of the mesh axis size.
+
+    Multi-host: pass ``topology`` (a
+    :class:`repro.parallel.topology.FleetTopology`) and each process
+    builds the shard for its OWN contiguous stream range — state leaves
+    have leading axis ``topology.local_size``, laid out over that
+    process's local devices.  ``update_block`` takes the local slab;
+    ``query_cohort`` still takes GLOBAL cohorts and is a collective
+    answered through a
+    :class:`~repro.parallel.topology.PartitionedAggTree` (owned subtrees
+    served locally, only the O(log S) top spine crossing processes as
+    compressed ``2ℓ×d`` node states, bit-identical to the unsplit
+    fleet).  Without a topology, a multi-process runtime is rejected
+    loudly — the implicit all-local-devices mesh would silently build a
+    fleet whose global shape no process actually holds.
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -605,9 +635,22 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         raise ValueError(
             f"shard_streams requires a JAX-backed sketch, got {sk.name!r} "
             f"(backend={sk.meta.get('backend')!r})")
+    if topology is not None:
+        return _shard_streams_topology(sk, int(streams), mesh, axis,
+                                       topology)
     if mesh is None:
-        from repro.launch.mesh import make_mesh_compat
-        mesh = make_mesh_compat((jax.device_count(),), (axis,))
+        if jax.process_count() > 1:
+            raise ValueError(
+                f"shard_streams(streams={int(streams)}) in a multi-process "
+                f"runtime (process_count={jax.process_count()}) needs a "
+                "topology: the default mesh covers only this process's "
+                "local devices, so a global-shape fleet state would exist "
+                "on no process.  Pass topology=FleetTopology(streams) "
+                "(repro.parallel.topology) so each process owns a "
+                "contiguous stream range, or pass an explicit mesh if you "
+                "really mean a per-process private fleet.")
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(axis)
     ndev = int(mesh.shape[axis])
     S = int(streams)
     if S % ndev:
@@ -652,6 +695,69 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         space=fleet.space,
         merge=fleet.merge,
         query_cohort=fleet.query_cohort,
+    )
+
+
+def _shard_streams_topology(sk: SlidingSketch, S: int, mesh, axis: str,
+                            topology) -> SlidingSketch:
+    """The multi-host branch of :func:`shard_streams`: this process's
+    shard of a topology-partitioned fleet.
+
+    The local fleet is an ordinary single-host ``shard_streams`` over
+    ``topology.local_size`` streams (same SPMD update program, same slab
+    sharding contract) — only the *stream indexing* and the query plane
+    change: state/update/query operate on LOCAL shapes, while
+    ``query_cohort`` speaks GLOBAL stream ids through the collective
+    :class:`~repro.parallel.topology.PartitionedAggTree`.
+    """
+    from repro.parallel.topology import PartitionedAggTree
+
+    if topology.S != S:
+        raise ValueError(
+            f"topology covers {topology.S} streams but shard_streams was "
+            f"asked for {S} — build both from the same fleet size")
+    if mesh is None:
+        from repro.launch.mesh import make_local_mesh
+        mesh = make_local_mesh(axis)
+    local = shard_streams(sk, topology.local_size, mesh, axis=axis)
+
+    box: Dict[str, Any] = {}
+
+    def _tree() -> PartitionedAggTree:
+        tree = box.get("tree")
+        if tree is None:
+            tree = box["tree"] = PartitionedAggTree(sk, topology)
+        return tree
+
+    def query_cohort(state, cohort=ALL, t=None):
+        return _tree().query(state, cohort, t)
+
+    def space(state):
+        per = local.space(state).per_stream
+        tree = box.get("tree")
+        cache_rows = 0 if tree is None else tree.space()
+        return FleetSpace(per_stream=per,
+                          total=jnp.sum(per) + cache_rows,
+                          cache_rows=cache_rows)
+
+    return SlidingSketch(
+        name=(f"topo[{sk.name}x{S}@{topology.pid}/{topology.P}"
+              f":{topology.lo}-{topology.hi}]"),
+        meta=dict(sk.meta, streams=S, base=sk, mesh=mesh,
+                  devices=local.meta["devices"], axis=axis,
+                  slab_sharding=local.meta["slab_sharding"],
+                  topology=topology,
+                  local_streams=topology.local_size,
+                  local_range=(topology.lo, topology.hi),
+                  agg_box=box),
+        init=local.init,
+        update=local.update,
+        update_block=local.update_block,
+        query_rows=local.query_rows,
+        query=local.query,
+        space=space,
+        merge=local.merge,
+        query_cohort=query_cohort,
     )
 
 
@@ -709,6 +815,7 @@ def save_fleet(path: str, fleet: SlidingSketch, state, t, *,
             "via make_sketch() so the checkpoint can name it in the "
             "registry")
     mesh = fleet.meta.get("mesh")
+    topo = fleet.meta.get("topology")
     aux = dict(aux or {})
     sketch_spec: Dict[str, Any] = {
         "sketch": spec,
@@ -720,6 +827,14 @@ def save_fleet(path: str, fleet: SlidingSketch, state, t, *,
         "t": int(t),
         "aux_keys": sorted(aux),
     }
+    if topo is not None:
+        # one self-describing shard manifest per process, side by side
+        # under `path` — restore_fleet reassembles ANY process count from
+        # whatever shards it finds (process-elastic, PR 3's device
+        # elasticity one level up)
+        sketch_spec["topology"] = topo.spec()
+        sketch_spec["local_streams"] = int(topo.local_size)
+        path = fleet_shard_dir(path, topo.lo, topo.hi)
     if spec_extra:
         sketch_spec.update(spec_extra)
     try:
@@ -738,17 +853,56 @@ def save_fleet(path: str, fleet: SlidingSketch, state, t, *,
         keep=keep)
 
 
-def restore_fleet(path: str, mesh=None, *,
-                  step: int | None = None) -> FleetCheckpoint:
+def fleet_shard_dir(path: str, lo: int, hi: int) -> str:
+    """Per-process shard directory of a topology-partitioned checkpoint."""
+    import os
+
+    return os.path.join(str(path), f"shard-{int(lo):06d}-{int(hi):06d}")
+
+
+def _fleet_shards(path: str):
+    """``[(lo, hi, dir)]`` shard checkpoints under ``path`` (stream order),
+    or ``[]`` when ``path`` is a plain single-manifest fleet checkpoint."""
+    import os
+    import re
+
+    out = []
+    try:
+        entries = sorted(os.listdir(path))
+    except (FileNotFoundError, NotADirectoryError):
+        return out
+    for name in entries:
+        m = re.fullmatch(r"shard-(\d{6})-(\d{6})", name)
+        if m and os.path.isdir(os.path.join(path, name)):
+            out.append((int(m.group(1)), int(m.group(2)),
+                        os.path.join(path, name)))
+    return out
+
+
+def restore_fleet(path: str, mesh=None, *, step: int | None = None,
+                  topology=None) -> FleetCheckpoint:
     """Rebuild a fleet from a :func:`save_fleet` checkpoint — elastically.
 
     The base sketch is reconstructed from the registry using the
     ``sketch_spec`` manifest section, the fleet is re-laid-out with
-    ``shard_streams`` over ``mesh`` (default: a fresh 1-D mesh over all
-    local devices — the *restoring* process's device count, which need not
-    match the saving one as long as it divides the fleet size), and every
-    state leaf is ``device_put`` with the target mesh's shardings.
-    Restoring a ``vmap_streams`` (unsharded) checkpoint ignores ``mesh``.
+    ``shard_streams`` over ``mesh`` (default: a fresh 1-D mesh over the
+    *restoring* process's local devices, whose count need not match the
+    saving one as long as it divides the fleet size), and every state
+    leaf is ``device_put`` with the target mesh's shardings.  Restoring
+    a ``vmap_streams`` (unsharded) checkpoint ignores ``mesh``.
+
+    Process elasticity: the save-time and restore-time process counts
+    are independent.  A topology fleet saves one self-describing shard
+    manifest per process (``shard-LLLLLL-HHHHHH/`` under ``path``);
+    ``restore_fleet`` assembles THIS caller's stream range from whatever
+    layout it finds — plain checkpoint restored under a ``topology``
+    slices the caller's range out; shard checkpoints restored without a
+    topology gather back into one full fleet; shard checkpoints restored
+    under a different process count slice-and-concatenate the
+    overlapping shards.  Per-stream leaves are exact row slices, so
+    every reassembly is bit-identical.  ``aux`` arrays ride along
+    concatenated in stream order (they are row-aligned per shard, e.g.
+    the engine's pending queues — consumers filter by ownership).
 
     Returns a :class:`FleetCheckpoint`; continuing the stream from
     ``.state`` at clock ``.t`` is numerically identical to never having
@@ -756,38 +910,133 @@ def restore_fleet(path: str, mesh=None, *,
     """
     from repro.train import checkpoint as ckpt
 
-    manifest = ckpt.read_manifest(path, step=step)
+    shards = _fleet_shards(path)
+    if not shards and topology is None:
+        manifest = ckpt.read_manifest(path, step=step)
+        ss = _fleet_spec_of(manifest, path)
+        spec = ss["sketch"]
+        sk = make_sketch(spec["name"], d=spec["d"], eps=spec["eps"],
+                         window=spec["window"], **spec.get("hyper", {}))
+        S = int(ss["streams"])
+        shardings = None
+        if ss.get("sharded"):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            axis = ss.get("mesh_axis") or "streams"
+            fleet = shard_streams(sk, S, mesh, axis=axis)
+            sharding = NamedSharding(fleet.meta["mesh"], P(axis))
+        else:
+            fleet, sharding = vmap_streams(sk, S), None
+        state_like = jax.eval_shape(lambda: fleet.init())
+        aux_keys = list(ss.get("aux_keys", []))
+        tree_like = {"aux": {k: 0 for k in aux_keys}, "state": state_like}
+        if sharding is not None:
+            shardings = {"aux": {k: None for k in aux_keys},
+                         "state": jax.tree.map(lambda _: sharding,
+                                               state_like)}
+        # pin the step resolved above — a concurrent saver landing a new
+        # step between read_manifest and restore must not change which
+        # checkpoint the leaves come from (the template tree was built
+        # for THIS manifest)
+        tree, manifest = ckpt.restore(path, tree_like,
+                                      step=int(manifest["step"]),
+                                      shardings=shardings)
+        aux = {k: np.asarray(v) for k, v in tree["aux"].items()}
+        return FleetCheckpoint(fleet, tree["state"], int(ss["t"]), aux,
+                               manifest)
+    return _restore_fleet_elastic(path, shards, mesh, step, topology)
+
+
+def _fleet_spec_of(manifest, path) -> Dict[str, Any]:
     ss = manifest.get("sketch_spec")
     if not ss:
         raise ValueError(
             f"checkpoint under {path!r} has no sketch_spec manifest "
             "section — not a fleet checkpoint (train states restore via "
             "repro.train.checkpoint.restore)")
+    return ss
+
+
+def _restore_fleet_elastic(path, shards, mesh, step, topology
+                           ) -> FleetCheckpoint:
+    """Cross-process-count reassembly: slice the caller's stream range
+    out of whatever shard layout ``path`` holds (see ``restore_fleet``)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.train import checkpoint as ckpt
+
+    # -- source manifests ---------------------------------------------------
+    if shards:
+        sources = []
+        for lo, hi, sdir in shards:
+            manifest = ckpt.read_manifest(sdir, step=step)
+            sources.append((lo, hi, sdir, manifest,
+                            _fleet_spec_of(manifest, sdir)))
+    else:
+        manifest = ckpt.read_manifest(path, step=step)
+        ss0 = _fleet_spec_of(manifest, path)
+        sources = [(0, int(ss0["streams"]), path, manifest, ss0)]
+    ss = sources[0][4]
+    S, t = int(ss["streams"]), int(ss["t"])
+    for lo, hi, sdir, _, ssi in sources:
+        if ssi["sketch"] != ss["sketch"] or int(ssi["streams"]) != S:
+            raise ValueError(
+                f"shard {sdir!r} disagrees with its siblings on the fleet "
+                "spec — shards of one checkpoint must come from one fleet")
+        if int(ssi["t"]) != t:
+            raise ValueError(
+                f"shard {sdir!r} was saved at clock {ssi['t']} but its "
+                f"siblings at {t} — processes must checkpoint the same "
+                "tick (the engine checkpoint path is a collective)")
     spec = ss["sketch"]
     sk = make_sketch(spec["name"], d=spec["d"], eps=spec["eps"],
                      window=spec["window"], **spec.get("hyper", {}))
-    S = int(ss["streams"])
-    shardings = None
-    if ss.get("sharded"):
-        from jax.sharding import NamedSharding, PartitionSpec as P
+    axis = ss.get("mesh_axis") or "streams"
 
-        axis = ss.get("mesh_axis") or "streams"
-        fleet = shard_streams(sk, S, mesh, axis=axis)
-        sharding = NamedSharding(fleet.meta["mesh"], P(axis))
+    # -- target fleet -------------------------------------------------------
+    if topology is not None:
+        if topology.S != S:
+            raise ValueError(
+                f"checkpoint holds {S} streams but the topology covers "
+                f"{topology.S}")
+        fleet = shard_streams(sk, S, mesh, axis=axis, topology=topology)
+        tlo, thi = topology.lo, topology.hi
     else:
-        fleet, sharding = vmap_streams(sk, S), None
-    state_like = jax.eval_shape(lambda: fleet.init())
-    aux_keys = list(ss.get("aux_keys", []))
-    tree_like = {"aux": {k: 0 for k in aux_keys}, "state": state_like}
-    if sharding is not None:
-        shardings = {"aux": {k: None for k in aux_keys},
-                     "state": jax.tree.map(lambda _: sharding, state_like)}
-    # pin the step resolved above — a concurrent saver landing a new step
-    # between read_manifest and restore must not change which checkpoint
-    # the leaves come from (the template tree was built for THIS manifest)
-    tree, manifest = ckpt.restore(path, tree_like,
-                                  step=int(manifest["step"]),
-                                  shardings=shardings)
-    aux = {k: np.asarray(v) for k, v in tree["aux"].items()}
-    return FleetCheckpoint(fleet, tree["state"], int(ss["t"]), aux,
-                           manifest)
+        fleet = shard_streams(sk, S, mesh, axis=axis)
+        tlo, thi = 0, S
+
+    # -- gather + slice the overlapping shards, stream order ----------------
+    overlapping = [(lo, hi, sdir, m, ssi)
+                   for lo, hi, sdir, m, ssi in sources
+                   if lo < thi and hi > tlo]
+    cover = tlo
+    pieces, aux_pieces = [], []
+    for lo, hi, sdir, m, ssi in sorted(overlapping):
+        if lo > cover:
+            break
+        cover = max(cover, hi)
+        src = vmap_streams(sk, hi - lo)
+        state_like = jax.eval_shape(lambda: src.init())
+        aux_keys = list(ssi.get("aux_keys", []))
+        tree_like = {"aux": {k: 0 for k in aux_keys}, "state": state_like}
+        tree, _ = ckpt.restore(sdir, tree_like, step=int(m["step"]))
+        a, b = max(tlo, lo) - lo, min(thi, hi) - lo
+        pieces.append(jax.tree.map(lambda x: np.asarray(x)[a:b],
+                                   tree["state"]))
+        aux_pieces.append({k: np.asarray(v)
+                           for k, v in tree["aux"].items()})
+    if cover < thi:
+        raise ValueError(
+            f"checkpoint under {path!r} has no shard covering streams "
+            f"[{cover}, {thi}) — incomplete save (a process died before "
+            "its shard landed?)")
+    state_np = jax.tree.map(
+        lambda *xs: np.concatenate(xs, axis=0) if len(xs) > 1 else xs[0],
+        *pieces)
+    sharding = NamedSharding(fleet.meta["mesh"], P(axis))
+    state = jax.tree.map(lambda x: jax.device_put(x, sharding), state_np)
+    aux: Dict[str, np.ndarray] = {}
+    for k in {k for p in aux_pieces for k in p}:
+        vals = [p[k] for p in aux_pieces if k in p]
+        aux[k] = vals[0] if len(vals) == 1 else np.concatenate(vals, axis=0)
+    return FleetCheckpoint(fleet, state, t, aux, sources[0][3])

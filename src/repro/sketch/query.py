@@ -60,7 +60,30 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ALL", "AggTree", "Cohort", "full_reduce_streams"]
+__all__ = ["ALL", "AggTree", "Cohort", "canonical_cover",
+           "full_reduce_streams"]
+
+
+def canonical_cover(lo: int, hi: int, qlo: int, qhi: int,
+                    out: List[Tuple[int, int]]) -> None:
+    """Canonical segment-tree cover of ``[qlo, qhi)`` within the
+    midpoint-split node ``[lo, hi)`` — at most ``2⌈log₂S⌉`` canonical
+    nodes, appended to ``out`` in stream order.
+
+    This is THE decomposition both query planes share: ``AggTree`` uses
+    it over a single fleet's ``[0, S)``, and the partitioned plane
+    (``repro.parallel.topology``) uses the identical recursion over the
+    global stream axis so every process derives the same spine nodes —
+    a prerequisite for bit-identical cross-process answers.
+    """
+    if qlo <= lo and hi <= qhi:
+        out.append((lo, hi))
+        return
+    mid = (lo + hi) // 2
+    if qlo < mid:
+        canonical_cover(lo, mid, qlo, min(qhi, mid), out)
+    if qhi > mid:
+        canonical_cover(mid, hi, max(qlo, mid), qhi, out)
 
 
 # ---------------------------------------------------------------------------
@@ -373,14 +396,22 @@ class AggTree:
                    out: List[Tuple[int, int]]) -> None:
         """Canonical segment-tree cover of ``[qlo, qhi)`` within node
         ``[lo, hi)`` — at most ``2⌈log₂S⌉`` nodes, in stream order."""
-        if qlo <= lo and hi <= qhi:
-            out.append((lo, hi))
-            return
-        mid = (lo + hi) // 2
-        if qlo < mid:
-            self._decompose(lo, mid, qlo, min(qhi, mid), out)
-        if qhi > mid:
-            self._decompose(mid, hi, max(qlo, mid), qhi, out)
+        canonical_cover(lo, hi, qlo, qhi, out)
+
+    def node(self, state, lo: int, hi: int, t=None):
+        """Merged base-variant state of the single range ``[lo, hi)`` at
+        query time ``t`` — the midpoint-split fold, cached like any other
+        node.  The partitioned query plane uses this to materialize the
+        canonical subtree nodes it owns (which it publishes cross-process
+        as compressed ``2ℓ×d`` states) without re-deriving the fold."""
+        lo, hi = int(lo), int(hi)
+        if not (0 <= lo < hi <= self.S):
+            raise ValueError(f"node range [{lo}, {hi}) outside fleet "
+                             f"[0, {self.S})")
+        self._sync(state)
+        tkey = None if t is None else int(t)
+        self._last_tkey = tkey
+        return self._node(lo, hi, t, tkey)
 
     def _node(self, lo: int, hi: int, t, tkey):
         if hi - lo == 1:                       # leaf: a free slice, not cached

@@ -1,0 +1,439 @@
+"""Fleet topology unit tests (single process).
+
+Covers the AggTree-aligned partition, ownership lookups, the transports,
+the collective ``PartitionedAggTree`` query plane (two *threads* standing
+in for processes over a shared ``MemTransport`` — the real 2-process
+``jax.distributed`` pairs live in ``test_topology_distributed.py``), the
+loud multi-process-without-topology rejection in ``shard_streams``, and
+the process-elastic checkpoint reassembly (plain ↔ shards, P ↔ Q).
+"""
+
+import os
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.parallel.topology import (CoordTransport, DirTransport,
+                                     FleetTopology, MemTransport,
+                                     OwnershipError, PartitionedAggTree,
+                                     partition_streams)
+from repro.serve.engine import SketchFleetEngine
+from repro.sketch.api import (ALL, agg_tree, make_sketch, query_cohort,
+                              restore_fleet, save_fleet, shard_streams,
+                              vmap_streams)
+from repro.sketch.query import Cohort
+
+
+def _streams(S, n, d, seed=7):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(S, n, d)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    return X
+
+
+def _assert_trees_equal(a, b, msg=""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+def _topo(S, P, pid, transport, **kw):
+    return FleetTopology(S, num_processes=P, process_id=pid,
+                         transport=transport, timeout_s=30.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# partition_streams — AggTree-aligned, deterministic
+# ---------------------------------------------------------------------------
+
+
+def _is_canonical(lo, hi, S):
+    """[lo, hi) is reachable by midpoint splits descending from [0, S)."""
+    clo, chi = 0, S
+    while (clo, chi) != (lo, hi):
+        mid = (clo + chi) // 2
+        if hi <= mid:
+            chi = mid
+        elif lo >= mid:
+            clo = mid
+        else:
+            return False                 # the range straddles a midpoint
+        if chi - clo < hi - lo:
+            return False
+    return True
+
+
+@pytest.mark.parametrize("S", [1, 2, 3, 5, 7, 8, 12, 13, 64, 100])
+def test_partition_covers_contiguously_with_canonical_nodes(S):
+    for P in {1, 2, 3, min(5, S), S}:
+        if not (1 <= P <= S):
+            continue
+        ranges = partition_streams(S, P)
+        assert len(ranges) == P
+        assert ranges[0][0] == 0 and ranges[-1][1] == S
+        for (a, b), (c, d) in zip(ranges, ranges[1:]):
+            assert b == c, "ranges must tile [0, S) contiguously"
+        for lo, hi in ranges:
+            assert hi > lo
+            assert _is_canonical(lo, hi, S), \
+                f"[{lo}, {hi}) is not a canonical AggTree node of S={S}"
+
+
+def test_partition_is_deterministic_and_balanced():
+    assert partition_streams(8, 2) == ((0, 4), (4, 8))
+    assert partition_streams(8, 4) == ((0, 2), (2, 4), (4, 6), (6, 8))
+    assert partition_streams(8, 3) == ((0, 2), (2, 4), (4, 8))
+    # widest-first splitting keeps widths within ~2x of each other
+    for S, P in [(100, 7), (64, 5), (13, 4)]:
+        widths = [hi - lo for lo, hi in partition_streams(S, P)]
+        assert max(widths) <= 2 * min(widths) + 1
+
+
+def test_partition_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        partition_streams(8, 0)
+    with pytest.raises(ValueError):
+        partition_streams(8, 9)        # more processes than streams
+    with pytest.raises(ValueError):
+        partition_streams(0, 1)
+
+
+# ---------------------------------------------------------------------------
+# FleetTopology — ownership
+# ---------------------------------------------------------------------------
+
+
+def test_topology_ownership_lookup():
+    topo = _topo(8, 2, 0, MemTransport())
+    assert (topo.lo, topo.hi) == (0, 4) and topo.local_size == 4
+    assert [topo.owner_of(s) for s in range(8)] == [0] * 4 + [1] * 4
+    assert topo.owner_of_range(0, 4) == 0
+    assert topo.owner_of_range(4, 8) == 1
+    assert topo.owner_of_range(6, 8) == 1
+    assert topo.owner_of_range(0, 8) is None        # crosses the boundary
+    assert topo.owner_of_range(2, 6) is None
+    assert topo.is_local(3) and not topo.is_local(4)
+    assert topo.to_local(3) == 3
+    with pytest.raises(OwnershipError) as ei:
+        topo.to_local(5)
+    assert "process 1" in str(ei.value) and "[0, 4)" in str(ei.value)
+    with pytest.raises(ValueError):
+        topo.owner_of(8)
+    with pytest.raises(ValueError):
+        FleetTopology(8, num_processes=2, process_id=2,
+                      transport=MemTransport())
+
+
+def test_topology_defaults_to_single_process_runtime():
+    # no jax.distributed in this test process: defaults are P=1, pid=0
+    topo = FleetTopology(16)
+    assert (topo.P, topo.pid, topo.lo, topo.hi) == (1, 0, 0, 16)
+    assert isinstance(topo.transport, MemTransport)
+
+
+# ---------------------------------------------------------------------------
+# Transports
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["mem", "dir"])
+def test_transport_roundtrip_idempotent_timeout(tmp_path, kind):
+    tr = MemTransport() if kind == "mem" else DirTransport(str(tmp_path))
+    payload = os.urandom(257)
+    tr.publish("ns/v0/t3/000000-000004", payload)
+    tr.publish("ns/v0/t3/000000-000004", b"ignored")   # first write wins
+    assert tr.fetch("ns/v0/t3/000000-000004", timeout=1.0) == payload
+    with pytest.raises(TimeoutError) as ei:
+        tr.fetch("ns/v0/t3/never-published", timeout=0.05)
+    assert "collective" in str(ei.value)
+
+
+def test_coord_transport_requires_distributed_runtime():
+    with pytest.raises(RuntimeError, match="jax.distributed"):
+        CoordTransport()
+
+
+# ---------------------------------------------------------------------------
+# shard_streams — topology wiring + the loud multi-process rejection
+# ---------------------------------------------------------------------------
+
+
+def test_shard_streams_without_topology_rejects_multi_process(monkeypatch):
+    sk = make_sketch("dsfd", d=4, eps=0.25, window=8)
+    monkeypatch.setattr(jax, "process_count", lambda: 2)
+    with pytest.raises(ValueError, match="topology"):
+        shard_streams(sk, 8)
+
+
+def test_shard_streams_default_mesh_uses_local_devices():
+    sk = make_sketch("dsfd", d=4, eps=0.25, window=8)
+    fleet = shard_streams(sk, 8)
+    assert list(fleet.meta["mesh"].devices.ravel()) == jax.local_devices()
+
+
+def test_topology_fleet_meta_and_local_shapes():
+    S, d = 8, 5
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=16)
+    topo = _topo(S, 2, 1, MemTransport())
+    fleet = shard_streams(sk, S, topology=topo)
+    assert fleet.meta["streams"] == S              # GLOBAL stream count
+    assert fleet.meta["local_streams"] == 4
+    assert fleet.meta["local_range"] == (4, 8)
+    assert fleet.meta["topology"] is topo
+    state = fleet.init()
+    for leaf in jax.tree.leaves(state):
+        assert np.shape(leaf)[0] == 4              # LOCAL leading axis
+    assert isinstance(agg_tree(fleet), PartitionedAggTree)
+    with pytest.raises(ValueError, match="topology covers"):
+        shard_streams(sk, 16, topology=topo)
+
+
+# ---------------------------------------------------------------------------
+# PartitionedAggTree — collective queries, bit-identical to one fleet
+# ---------------------------------------------------------------------------
+
+
+def _run_collective(S, P, sk, X, ts, t, cohorts, *, namespace="t"):
+    """Run P thread-'processes' over one MemTransport; return per-process
+    answer lists + trees."""
+    transport = MemTransport()
+    outs, errs = {}, {}
+
+    def proc(pid):
+        try:
+            topo = _topo(S, P, pid, transport, namespace=namespace)
+            fleet = shard_streams(sk, S, topology=topo)
+            st = fleet.update_block(fleet.init(), X[topo.lo:topo.hi], ts)
+            outs[pid] = ([fleet.query_cohort(st, c, t) for c in cohorts],
+                         agg_tree(fleet))
+        except Exception as e:                     # pragma: no cover
+            errs[pid] = e
+
+    threads = [threading.Thread(target=proc, args=(p,)) for p in range(P)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs, errs
+    return outs
+
+
+@pytest.mark.parametrize("S,P", [(8, 2), (6, 2), (8, 4), (13, 3)])
+def test_collective_query_bit_identical_to_single_fleet(S, P):
+    ndev = len(jax.local_devices())
+    if any((hi - lo) % ndev for lo, hi in partition_streams(S, P)):
+        pytest.skip(f"local shard sizes of S={S} P={P} not divisible by "
+                    f"the {ndev} forced host devices (CI job 2)")
+    d, n, N = 5, 20, 12
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    X = _streams(S, n, d)
+    ts = np.arange(1, n + 1, dtype=np.int32)
+    fleet = vmap_streams(sk, S)
+    st = fleet.update_block(fleet.init(), X, ts)
+    cohorts = [ALL, Cohort.range(1, S - 1), Cohort.of(0, S - 1)]
+    oracle = [query_cohort(fleet, st, c, n) for c in cohorts]
+    outs = _run_collective(S, P, sk, X, ts, n, cohorts,
+                           namespace=f"q{S}x{P}")
+    # per query: ≤ 2⌈log₂S⌉ canonical segments, each split at most at the
+    # P-1 ownership boundaries — only compressed spine nodes cross hosts
+    budget = len(cohorts) * (2 * int(np.ceil(np.log2(S))) + 2 * (P - 1))
+    for pid, (answers, tree) in outs.items():
+        for c, got, want in zip(cohorts, answers, oracle):
+            _assert_trees_equal(want, got, msg=f"pid {pid} cohort {c}")
+        assert tree.remote_fetches <= budget
+        assert tree.spine_merges <= 2 * budget
+
+
+def test_collective_query_memoizes_and_detects_unannounced_state():
+    S, d, n, N = 8, 4, 10, 8
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    topo = _topo(S, 1, 0, MemTransport())
+    fleet = shard_streams(sk, S, topology=topo)
+    X = _streams(S, n, d)
+    ts = np.arange(1, n + 1, dtype=np.int32)
+    st = fleet.update_block(fleet.init(), X, ts)
+    tree = agg_tree(fleet)
+    a = fleet.query_cohort(st, ALL, n)
+    m0 = tree.merges
+    b = fleet.query_cohort(st, ALL, n)             # warm: result memo hit
+    assert tree.merges == m0 and b is a
+    st2 = fleet.update_block(st, X, ts + n)        # unannounced transition
+    fleet.query_cohort(st2, ALL, 2 * n)
+    assert tree.resets == 1 and tree.version == 1  # sound, never stale
+
+
+def test_collective_advance_keeps_version_in_lockstep():
+    S, d, n, N = 8, 4, 8, 8
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    transport = MemTransport()
+    X = _streams(S, n + 4, d)
+    outs = {}
+
+    def proc(pid):
+        topo = _topo(S, 2, pid, transport, namespace="adv")
+        fleet = shard_streams(sk, S, topology=topo)
+        tree = agg_tree(fleet)
+        ts = np.arange(1, n + 1, dtype=np.int32)
+        st = fleet.update_block(fleet.init(), X[topo.lo:topo.hi, :n], ts)
+        tree.advance(st, None)
+        a1 = fleet.query_cohort(st, ALL, n)
+        st = fleet.update_block(st, X[topo.lo:topo.hi, n:],
+                                np.arange(n + 1, n + 5, dtype=np.int32))
+        tree.advance(st, None)
+        a2 = fleet.query_cohort(st, ALL, n + 4)
+        outs[pid] = (a1, a2, tree.version)
+
+    threads = [threading.Thread(target=proc, args=(p,)) for p in (0, 1)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    _assert_trees_equal(outs[0][0], outs[1][0])
+    _assert_trees_equal(outs[0][1], outs[1][1])
+    assert outs[0][2] == outs[1][2] == 2
+
+
+# ---------------------------------------------------------------------------
+# Process-elastic checkpoints (single-process: slicing/concat correctness)
+# ---------------------------------------------------------------------------
+
+
+def test_restore_plain_checkpoint_under_topology_slices_exactly(tmp_path):
+    S, d, n, N = 8, 5, 16, 12
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    fleet = shard_streams(sk, S)
+    X = _streams(S, n, d)
+    st = fleet.update_block(fleet.init(), X,
+                            np.arange(1, n + 1, dtype=np.int32))
+    save_fleet(str(tmp_path), fleet, st, n)
+    for pid in range(2):
+        topo = _topo(S, 2, pid, MemTransport())
+        fc = restore_fleet(str(tmp_path), topology=topo)
+        assert fc.t == n
+        assert fc.fleet.meta["topology"] is topo
+        _assert_trees_equal(
+            jax.tree.map(lambda x: np.asarray(x)[topo.lo:topo.hi], st),
+            fc.state, msg=f"pid {pid}")
+
+
+def test_restore_shards_as_plain_fleet_and_reshard(tmp_path):
+    S, d, n, N = 8, 5, 16, 12
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=N)
+    X = _streams(S, n, d)
+    ts = np.arange(1, n + 1, dtype=np.int32)
+    full = vmap_streams(sk, S)
+    st = full.update_block(full.init(), X, ts)
+    for pid in range(2):                       # "both processes" save
+        topo = _topo(S, 2, pid, MemTransport())
+        f = shard_streams(sk, S, topology=topo)
+        s = f.update_block(f.init(), X[topo.lo:topo.hi], ts)
+        save_fleet(str(tmp_path), f, s, n,
+                   aux={"pending_user": np.array([topo.lo], np.int32)})
+    # 2 shards -> 1 plain fleet, bit-identical, aux concatenated in order
+    fc = restore_fleet(str(tmp_path))
+    _assert_trees_equal(st, fc.state)
+    np.testing.assert_array_equal(fc.aux["pending_user"], [0, 4])
+    # 2 shards -> 3 processes (slice + concat across shard boundaries)
+    for pid in range(3):
+        topo3 = _topo(S, 3, pid, MemTransport())
+        fc3 = restore_fleet(str(tmp_path), topology=topo3)
+        _assert_trees_equal(
+            jax.tree.map(lambda x: np.asarray(x)[topo3.lo:topo3.hi], st),
+            fc3.state, msg=f"3-way pid {pid}")
+
+
+def test_restore_missing_shard_fails_loudly(tmp_path):
+    S, d, n = 8, 4, 8
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=8)
+    topo = _topo(S, 2, 0, MemTransport())
+    f = shard_streams(sk, S, topology=topo)
+    st = f.update_block(f.init(), _streams(S, n, d)[:4],
+                        np.arange(1, n + 1, dtype=np.int32))
+    save_fleet(str(tmp_path), f, st, n)        # only shard [0, 4) lands
+    with pytest.raises(ValueError, match=r"no shard covering"):
+        restore_fleet(str(tmp_path))
+    # ...but the process that only needs [0, 4) restores fine
+    fc = restore_fleet(str(tmp_path), topology=_topo(S, 2, 0,
+                                                     MemTransport()))
+    _assert_trees_equal(st, fc.state)
+
+
+# ---------------------------------------------------------------------------
+# Engine: ownership-routed ingest + elastic engine checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _fill_engine(eng, X, users=None, rows_per_user=6):
+    S, d = X.shape[0], X.shape[2]
+    users = np.repeat(np.arange(S), rows_per_user)
+    rows = X[:, :rows_per_user].reshape(-1, d)
+    eng.submit_many(users, rows)
+    eng.run()
+
+
+def test_engine_ownership_routing_and_rejection():
+    S, d, N = 8, 5, 16
+    X = _streams(S, 10, d)
+    topo = _topo(S, 2, 0, MemTransport())
+    eng = SketchFleetEngine("dsfd", d=d, streams=S, eps=0.25, window=N,
+                            block=4, topology=topo)
+    assert eng.S == S and eng.S_local == 4
+    assert eng.submit(3, X[3, 0])                  # owned: accepted
+    with pytest.raises(OwnershipError) as ei:
+        eng.submit(5, X[5, 0])
+    assert "process 1" in str(ei.value)
+    with pytest.raises(OwnershipError):
+        eng.query_user(5)
+    backlog0 = eng.backlog
+    with pytest.raises(OwnershipError):            # mixed batch: nothing in
+        eng.submit_many(np.array([1, 6]), X[:2, 1])
+    assert eng.backlog == backlog0
+    with pytest.raises(ValueError, match="outside the fleet"):
+        eng.submit(S + 3, X[0, 0])                 # global bounds still apply
+    eng.run()
+    assert eng.query_user(3).shape == eng.query_user(0).shape
+
+
+def test_engine_checkpoint_elastic_one_to_two_and_back(tmp_path):
+    S, d, N, block = 8, 5, 16, 4
+    X = _streams(S, 12, d)
+    eng = SketchFleetEngine("dsfd", d=d, streams=S, eps=0.25, window=N,
+                            block=block)
+    _fill_engine(eng, X)
+    eng.submit(1, X[1, 8])                         # pending across the save
+    eng.submit(6, X[6, 8])
+    p1 = str(tmp_path / "one")
+    eng.checkpoint(p1)
+    oracle = {u: eng.query_user(u) for u in range(S)}
+
+    halves = []
+    for pid in range(2):                           # 1 -> 2
+        topo = _topo(S, 2, pid, MemTransport())
+        e = SketchFleetEngine.from_checkpoint(p1, topology=topo)
+        assert (e.t, e.S, e.S_local) == (eng.t, S, 4)
+        assert e.rows_ingested == eng.rows_ingested
+        assert e.backlog == 1                      # pending split by owner
+        for u in range(topo.lo, topo.hi):
+            np.testing.assert_array_equal(e.query_user(u), oracle[u])
+        halves.append(e)
+
+    p2 = str(tmp_path / "two")                     # 2 -> 1
+    for e in halves:
+        e.checkpoint(p2)
+    back = SketchFleetEngine.from_checkpoint(p2)
+    assert (back.t, back.S, back.backlog) == (eng.t, S, 2)
+    for u in range(S):
+        np.testing.assert_array_equal(back.query_user(u), oracle[u])
+    # both restored fleets drain their pending rows to the same answers
+    back.run()
+    for e in halves:
+        e.run()
+    for u in range(S):
+        owner = halves[0] if u < 4 else halves[1]
+        np.testing.assert_array_equal(back.query_user(u),
+                                      owner.query_user(u))

@@ -1,0 +1,194 @@
+"""Real 2-process ``jax.distributed`` pairs over the CPU coordination
+service (the acceptance criteria of the partitioned-fleet PR).
+
+Each test launches two subprocesses that ``jax.distributed.initialize``
+against a coordinator on a free localhost port; the parent computes the
+single-process oracle and the children assert bit-identity from inside
+the pair.  Pinned here:
+
+* a 2-process fleet where each process owns half the streams answers
+  ``query_cohort(ALL)`` and a boundary-crossing cohort bit-identically
+  to the single-process fleet, with cross-process node fetches counted
+  and asserted within the ``2⌈log₂S⌉`` canonical-spine budget;
+* an engine checkpoint saved by ONE process restores on TWO
+  (ownership-filtered pending rows, per-user answers bit-identical) and
+  the two shard checkpoints those processes write restore back on ONE.
+"""
+
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+from repro.serve.engine import SketchFleetEngine
+from repro.sketch.api import ALL, make_sketch, query_cohort, vmap_streams
+from repro.sketch.query import Cohort
+
+S, D, N_ROWS, WINDOW, BLOCK = 8, 5, 20, 12, 4
+
+
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _spawn_pair(script: str, root: str):
+    """Run ``script`` as process 0 and 1 of a 2-process jax.distributed
+    pair; argv is (process_id, coordinator_port, shared_dir)."""
+    port = _free_port()
+    env = dict(
+        os.environ,
+        JAX_PLATFORM_NAME="cpu",
+        PYTHONPATH=os.pathsep.join(
+            filter(None, [os.environ.get("PYTHONPATH", "")]
+                   + [os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src")])))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", script, str(pid), str(port), root],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env)
+        for pid in range(2)]
+    outs = []
+    for p in procs:
+        try:
+            out, err = p.communicate(timeout=540)
+        except subprocess.TimeoutExpired:
+            for q in procs:
+                q.kill()
+            raise
+        outs.append((p.returncode, out, err))
+    for pid, (rc, out, err) in enumerate(outs):
+        assert rc == 0, (f"distributed child {pid} failed (rc={rc})\n"
+                         f"--- stdout ---\n{out}\n--- stderr ---\n{err}")
+    return outs
+
+
+_PREAMBLE = """
+import os, sys
+pid, port, root = int(sys.argv[1]), sys.argv[2], sys.argv[3]
+import numpy as np
+import jax
+jax.distributed.initialize(coordinator_address="127.0.0.1:" + port,
+                           num_processes=2, process_id=pid)
+assert jax.process_count() == 2 and jax.process_index() == pid
+"""
+
+
+_QUERY_SCRIPT = _PREAMBLE + """
+from repro.parallel.topology import FleetTopology
+from repro.sketch.api import ALL, agg_tree, make_sketch, shard_streams
+from repro.sketch.query import Cohort
+
+data = np.load(os.path.join(root, "oracle.npz"))
+X = data["X"]
+S, n, d = X.shape
+t = int(data["t"])
+sk = make_sketch("dsfd", d=d, eps=0.25, window=int(data["window"]))
+topo = FleetTopology(S)                      # defaults from the runtime
+assert (topo.P, topo.pid) == (2, pid)
+assert topo.local_size == S // 2             # each process owns half
+fleet = shard_streams(sk, S, topology=topo)
+ts = np.arange(1, n + 1, dtype=np.int32)
+st = fleet.update_block(fleet.init(), X[topo.lo:topo.hi], ts)
+answers = {"all": fleet.query_cohort(st, ALL, t),
+           "mid": fleet.query_cohort(st, Cohort.range(2, 6), t)}
+tree = agg_tree(fleet)
+budget = 2 * int(np.ceil(np.log2(S)))        # canonical spine bound
+assert tree.remote_fetches <= budget, (tree.remote_fetches, budget)
+assert tree.spine_merges <= budget, (tree.spine_merges, budget)
+for name, got in answers.items():
+    keys = sorted(k for k in data.files if k.startswith(name + "_leaf_"))
+    leaves = jax.tree.leaves(got)
+    assert len(keys) == len(leaves), (name, len(keys), len(leaves))
+    for k, g in zip(keys, leaves):
+        np.testing.assert_array_equal(data[k], np.asarray(g),
+                                      err_msg=f"pid {pid} {name} {k}")
+print("TOPO-QUERY-OK fetches=%d spine=%d" % (tree.remote_fetches,
+                                             tree.spine_merges))
+"""
+
+
+_ENGINE_SCRIPT = _PREAMBLE + """
+from repro.parallel.topology import FleetTopology, OwnershipError
+from repro.serve.engine import SketchFleetEngine
+
+data = np.load(os.path.join(root, "engine_oracle.npz"))
+S, d = int(data["S"]), int(data["d"])
+topo = FleetTopology(S)
+eng = SketchFleetEngine.from_checkpoint(os.path.join(root, "ck1"),
+                                        topology=topo)
+assert eng.t == int(data["t"]), (eng.t, int(data["t"]))
+assert (eng.S, eng.S_local) == (S, S // 2)
+assert eng.backlog == 1                      # pending rows split by owner
+for u in range(topo.lo, topo.hi):
+    np.testing.assert_array_equal(eng.query_user(u), data["user_%03d" % u],
+                                  err_msg=f"pid {pid} user {u}")
+other = 0 if pid == 1 else topo.hi           # a stream the peer owns
+try:
+    eng.submit(other, np.zeros(d, np.float32))
+    raise SystemExit("submit to non-owned stream did not raise")
+except OwnershipError as e:
+    assert f"process {1 - pid}" in str(e), str(e)
+eng.checkpoint(os.path.join(root, "ck2"))    # each writes its own shard
+topo.barrier("ck2-done")
+print("TOPO-ENGINE-OK")
+"""
+
+
+def _oracle_fleet(tmp):
+    rng = np.random.default_rng(11)
+    X = rng.normal(size=(S, N_ROWS, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    sk = make_sketch("dsfd", d=D, eps=0.25, window=WINDOW)
+    fleet = vmap_streams(sk, S)
+    st = fleet.update_block(fleet.init(), X,
+                            np.arange(1, N_ROWS + 1, dtype=np.int32))
+    payload = {"X": X, "t": N_ROWS, "window": WINDOW}
+    for name, cohort in [("all", ALL), ("mid", Cohort.range(2, 6))]:
+        for i, leaf in enumerate(jax.tree.leaves(
+                query_cohort(fleet, st, cohort, N_ROWS))):
+            payload[f"{name}_leaf_{i:03d}"] = np.asarray(leaf)
+    np.savez(os.path.join(tmp, "oracle.npz"), **payload)
+
+
+def test_two_process_query_bit_identical_within_spine_budget(tmp_path):
+    root = str(tmp_path)
+    _oracle_fleet(root)
+    outs = _spawn_pair(_QUERY_SCRIPT, root)
+    for _, out, _ in outs:
+        assert "TOPO-QUERY-OK" in out
+
+
+def test_engine_checkpoint_one_to_two_to_one(tmp_path):
+    root = str(tmp_path)
+    rng = np.random.default_rng(13)
+    X = rng.normal(size=(S, 9, D)).astype(np.float32)
+    eng = SketchFleetEngine("dsfd", d=D, streams=S, eps=0.25,
+                            window=WINDOW, block=BLOCK)
+    eng.submit_many(np.repeat(np.arange(S), 8), X[:, :8].reshape(-1, D))
+    eng.run()
+    eng.submit(1, X[1, 8])                   # left pending across the save
+    eng.submit(6, X[6, 8])
+    eng.checkpoint(os.path.join(root, "ck1"))
+    payload = {"S": S, "d": D, "t": eng.t}
+    for u in range(S):
+        payload[f"user_{u:03d}"] = eng.query_user(u)
+    np.savez(os.path.join(root, "engine_oracle.npz"), **payload)
+
+    outs = _spawn_pair(_ENGINE_SCRIPT, root)     # 1 -> 2
+    for _, out, _ in outs:
+        assert "TOPO-ENGINE-OK" in out
+
+    back = SketchFleetEngine.from_checkpoint(os.path.join(root, "ck2"))
+    assert (back.t, back.S, back.backlog) == (eng.t, S, 2)   # 2 -> 1
+    for u in range(S):
+        np.testing.assert_array_equal(back.query_user(u),
+                                      payload[f"user_{u:03d}"])
+    back.run()                               # the reunited fleet still runs
+    assert back.backlog == 0

@@ -69,7 +69,8 @@ def test_merge_streams_global_window_sketch(S):
     sk = make_sketch("dsfd", d=d, eps=1 / 4, window=N)
     fleet = vmap_streams(sk, S)
     state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
-    g = merge_streams(fleet, state, n)
+    with pytest.warns(DeprecationWarning):     # deprecated alias, still exact
+        g = merge_streams(fleet, state, n)
     union = np.vstack([X[s, n - N:] for s in range(S)])
     # additive mergeability: S-way union stays within S× the per-stream
     # bound plus the tree-compression term — 4ε relative is generous here
@@ -82,7 +83,7 @@ def test_merge_streams_global_window_sketch(S):
 
 def test_merge_streams_rejects_non_fleet():
     sk = make_sketch("dsfd", d=8, eps=1 / 4, window=16)
-    with pytest.raises(ValueError):
+    with pytest.warns(DeprecationWarning), pytest.raises(ValueError):
         merge_streams(sk, sk.init(), 1)
 
 

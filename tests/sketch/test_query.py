@@ -123,6 +123,32 @@ def test_cohort_rejects_bad_ranges():
     assert as_cohort(range(2, 5)) == Cohort.range(2, 5)
 
 
+def test_cohort_adjacent_ranges_coalesce():
+    # touching ranges collapse to one — cohorts are values, so the
+    # coalesced forms compare/hash equal and share the AggTree cache key
+    assert Cohort.range(2, 4) | Cohort.range(4, 6) == Cohort.range(2, 6)
+    assert hash(Cohort.range(2, 4) | Cohort.range(4, 6)) \
+        == hash(Cohort.range(2, 6))
+    assert Cohort.of(3).union(Cohort.of(4)).resolve(8) == ((3, 5),)
+    assert (Cohort.range(0, 3) | Cohort.range(2, 5)).resolve(8) == ((0, 5),)
+    # non-adjacent ranges stay separate
+    assert Cohort.of(1, 3).resolve(8) == ((1, 2), (3, 4))
+
+
+def test_query_cohort_rejects_empty_and_out_of_range():
+    S, n, d = 4, 10, 5
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=8)
+    fleet = vmap_streams(sk, S)
+    state = fleet.update_block(fleet.init(), jnp.asarray(_streams(S, n, d)),
+                               jnp.arange(1, n + 1, dtype=jnp.int32))
+    with pytest.raises(ValueError, match="empty cohort"):
+        query_cohort(fleet, state, Cohort(), n)
+    with pytest.raises(ValueError, match="exceeds fleet"):
+        query_cohort(fleet, state, Cohort.of(S), n)        # first bad id
+    with pytest.raises(ValueError, match="exceeds fleet"):
+        query_cohort(fleet, state, Cohort.range(2, S + 1), n)
+
+
 def test_single_sketch_query_cohort_raises():
     sk = make_sketch("dsfd", d=8, eps=0.25, window=16)
     with pytest.raises(ValueError, match="vmap_streams/shard_streams"):
@@ -166,19 +192,20 @@ def test_query_cohort_matches_fold(S, name, hyper):
                 f"{name} S={S}: cohort {c} != from-scratch fold")
 
 
-def test_merge_streams_is_query_cohort_all_alias():
+def test_merge_streams_is_deprecated_query_cohort_all_alias():
     S, n, d = 5, 30, 6
     X = _streams(S, n, d)
     ts = jnp.arange(1, n + 1, dtype=jnp.int32)
     sk = make_sketch("dsfd", d=d, eps=0.25, window=12)
     fleet = vmap_streams(sk, S)
     state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
-    _assert_trees_equal(merge_streams(fleet, state, n),
-                        query_cohort(fleet, state, ALL, n))
+    # deprecated: the warning must name the replacement call
+    with pytest.warns(DeprecationWarning, match="query_cohort"):
+        merged = merge_streams(fleet, state, n)
+    _assert_trees_equal(merged, query_cohort(fleet, state, ALL, n))
     # and the alias is correct for arbitrary (non-power-of-two) S: the
     # pad-free midpoint split, pinned against the independent oracle
-    _assert_trees_equal(merge_streams(fleet, state, n),
-                        _cohort_oracle(sk, state, S, [(0, S)], n))
+    _assert_trees_equal(merged, _cohort_oracle(sk, state, S, [(0, S)], n))
 
 
 def test_query_cohort_sharded_fleet_matches_vmap():
