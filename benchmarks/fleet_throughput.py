@@ -22,7 +22,11 @@ SPMD fleet path layered on ``vmap_streams``) and reports, for fleet sizes
   three ways — sync, async, and ``submit_many`` batched admission (the
   zero-copy packer) — with tri-way bit-identity asserted and paced
   dispatch latency reported per fleet size (the flatness-in-S gate for
-  the single-launch fused path).
+  the single-launch fused path), and
+* the persistent history plane (``history=True``): time-travel
+  ``query_interval`` latency cold (first touch, faulting spilled nodes
+  back from the cold tier) vs warm (hot LRU + memoized reductions),
+  plus the cold tier's on-disk footprint for the retired span.
 
 Besides the per-run CSV, writes machine-readable ``BENCH_fleet.json`` at
 the repo root so the perf trajectory is tracked across PRs; CI uploads it
@@ -295,6 +299,76 @@ def _bench_fused(*, name: str, S: int, d: int, rows_per_user: int,
     return out
 
 
+def _bench_history(*, name: str, S: int, d: int, rows_per_user: int,
+                   eps: float, window: int, block: int = 8,
+                   hot_nodes: int = 4, queries: int = 6,
+                   seed: int = 0) -> Dict:
+    """Time-travel query latency on the tiered history plane: ingest past
+    the window so ``rows_per_user − window`` units retire, with a small
+    hot tier (``hot_nodes``) so most of the dyadic index spills to disk.
+
+    * ``hist_cold_q_ms`` — first-touch interval queries: every spilled
+      cover node faults back through ``train/checkpoint.py``,
+    * ``hist_warm_q_ms`` — the identical intervals again: served from
+      the hot tier + memoized segment reductions (0 faults), and
+    * ``hist_spill_bytes`` — the cold tier's on-disk footprint for the
+      retired span (``hist_retired_units`` units of history)."""
+    import shutil
+    import tempfile
+
+    from repro.serve.engine import SketchFleetEngine
+
+    retired = rows_per_user - window
+    if retired < 2:
+        return {}                      # nothing historical to query
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(S, rows_per_user, d)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+
+    spill = tempfile.mkdtemp(prefix="bench-history-")
+    try:
+        eng = SketchFleetEngine(name, d=d, streams=S, eps=eps,
+                                window=window, block=block, history=True,
+                                history_hot_nodes=hot_nodes,
+                                history_dir=spill)
+        users = np.repeat(np.arange(S, dtype=np.int64), rows_per_user)
+        ok = eng.submit_many(users, X.reshape(-1, d))
+        assert bool(ok.all()), "unbounded queue rejected rows"
+        eng.run()
+        h = eng.history
+        frontier = h.retired_through + 1          # queryable: ts < frontier
+        spans = []
+        for _ in range(queries):
+            t1 = int(rng.integers(0, frontier - 1))
+            spans.append((t1, int(rng.integers(t1 + 1, frontier))))
+
+        f0 = h.store.faults
+        t0 = time.perf_counter()
+        for t1, t2 in spans:
+            eng.query_interval(None, t1, t2)
+        cold_s = (time.perf_counter() - t0) / queries
+        cold_faults = h.store.faults - f0
+
+        f0 = h.store.faults
+        t0 = time.perf_counter()
+        for t1, t2 in spans:
+            eng.query_interval(None, t1, t2)
+        warm_s = (time.perf_counter() - t0) / queries
+        assert h.store.faults == f0, "warm repeat faulted the cold tier"
+
+        return {
+            "hist_hot_nodes": hot_nodes,
+            "hist_retired_units": h.retired_units,
+            "hist_spilled_nodes": len(h.store.on_disk),
+            "hist_spill_bytes": h.store.spill_bytes(),
+            "hist_cold_q_ms": 1e3 * cold_s,
+            "hist_cold_faults_per_query": cold_faults / queries,
+            "hist_warm_q_ms": 1e3 * warm_s,
+        }
+    finally:
+        shutil.rmtree(spill, ignore_errors=True)
+
+
 def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
           n: int = 192, eps: float = 0.25, window: int = 64,
           seed: int = 0, shard: bool = True) -> List[Dict]:
@@ -324,6 +398,8 @@ def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
         fus = _bench_fused(name=name, S=S, d=d,
                            rows_per_user=min(n, 32), eps=eps,
                            window=window, seed=seed)
+        his = _bench_history(name=name, S=S, d=d, rows_per_user=n,
+                             eps=eps, window=window, seed=seed)
         print(f"fleet S={S:5d} on {jax.device_count()} device(s): "
               f"{rps:12,.0f} rows/s   (ingest {wall:.3f}s)")
         print(f"  engine ingest: sync "
@@ -349,11 +425,18 @@ def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
               f"({agg['speedup_warm_cohort_vs_full']:,.0f}x, "
               f"{agg['warm_cohort_merges_per_query']:.1f} merges/query ≤ "
               f"{agg['merge_budget_2log2S']})")
+        if his:
+            print(f"  history plane: {his['hist_retired_units']} units "
+                  f"retired, {his['hist_spilled_nodes']} nodes cold "
+                  f"({his['hist_spill_bytes'] / 1024:,.0f} KiB spilled); "
+                  f"query_interval cold {his['hist_cold_q_ms']:7.2f} ms "
+                  f"({his['hist_cold_faults_per_query']:.1f} faults/query) "
+                  f"→ warm {his['hist_warm_q_ms']:7.2f} ms (0 faults)")
         out.append({"fleet_size": S, "devices": jax.device_count(),
                     "rows_per_sec": round(rps), "ingest_wall_s": wall,
                     "rows_per_stream": n, "d": d, "eps": eps,
                     "window": window, "variant": name,
-                    **agg, **ing, **fus})
+                    **agg, **ing, **fus, **his})
     if len(out) > 1:
         lo, hi = out[0], out[-1]
         ratio = (hi["krylov_fused_dispatch_ms"]

@@ -160,6 +160,37 @@ print(f"fused krylov fleet ({kernel_lowering()} lowering): {S_k} streams × "
       f"{n_k} rows admitted in one submit_many, drained in {ticks_k} "
       f"single-launch ticks; query shape {eng_k.query_user(0).shape}")
 
+# --- Time travel: the persistent history plane -----------------------------
+# history=True stops the window from *forgetting*: content that slides out
+# is retired into a time-dyadic index of compressed (2ℓ, d) snapshots —
+# hot nodes in an in-memory LRU, the rest spilled write-once through
+# train/checkpoint.py into marker-protected dirs (retention will never
+# prune them).  query_interval(users, t1, t2) then answers ANY fully
+# retired historical interval in O(log(t2−t1)) node merges, bit-identical
+# to re-compressing the raw rows through the same dyadic schedule, and
+# the whole index rides engine checkpoints.
+import tempfile
+
+S_h, W_h, n_h = 8, 16, 48
+hist_root = tempfile.mkdtemp(prefix="quickstart-history-")
+eng_h = SketchFleetEngine("dsfd", d=d, streams=S_h, eps=eps, window=W_h,
+                          block=4, history=True, history_hot_nodes=8,
+                          history_dir=f"{hist_root}/spill")
+users_h = np.repeat(np.arange(S_h), n_h)
+assert eng_h.submit_many(users_h, streams[:S_h, :n_h].reshape(-1, d)).all()
+eng_h.run()                                   # window slides: rows with
+                                              # ts ≤ t−W retire as they expire
+t1, t2 = 5, eng_h.history.retired_through + 1  # any retired [t1, t2)
+H = eng_h.query_interval(None, t1, t2)         # whole-fleet historical
+Hc = eng_h.query_interval(range(0, 4), t1, t2)  # cohort-scoped
+eng_h.checkpoint(f"{hist_root}/ck")            # history index rides along
+eng_r = SketchFleetEngine.from_checkpoint(f"{hist_root}/ck")
+assert np.array_equal(eng_r.query_interval(None, t1, t2), H)
+print(f"\nhistory plane: t={eng_h.t}, window W={W_h} → intervals up to "
+      f"ts<{t2} queryable; [{t1}, {t2}) answered in "
+      f"{eng_h.history.store.faults} cold faults, shape {H.shape}; "
+      f"restored engine answers bit-identically")
+
 # --- Multi-host fleets: partitioned along the AggTree ----------------------
 # FleetTopology gives each process a contiguous stream range that is a
 # canonical node of the global segment tree, so a local AggTree answers

@@ -219,12 +219,20 @@ class SketchFleetEngine:
         between ticks are near-free.
       * ``query_global()``   — ``query_cohort(None)``: the whole-fleet
         aggregate (the old ``merge_streams`` re-reduction, now cached).
+      * ``query_interval(users, t1, t2)`` — time travel over RETIRED
+        history (``history=True``): any fully expired interval
+        ``[t1, t2)``, answered in O(log(t2−t1)) merges from the
+        persistent plane's tiered hot/cold dyadic index and carried
+        through checkpoints (``repro.sketch.history``).
     """
 
     def __init__(self, name: str = "dsfd", *, d: int, streams: int,
                  eps: float = 1 / 8, window: int = 1024, block: int = 8,
                  mesh=None, ingest: str = "async",
                  queue_capacity: Optional[int] = None, topology=None,
+                 history: bool = False,
+                 history_hot_nodes: Optional[int] = None,
+                 history_dir: Optional[str] = None,
                  **hyper):
         from repro.sketch.api import agg_tree, make_sketch, shard_streams
 
@@ -233,6 +241,7 @@ class SketchFleetEngine:
         self.fleet = shard_streams(self.base, streams, mesh,
                                    topology=topology)
         self.S, self.d, self.block = int(streams), int(d), int(block)
+        self.window = int(window)
         self.S_local = (int(topology.local_size) if topology is not None
                         else self.S)
         self.state = self.fleet.init()
@@ -241,6 +250,30 @@ class SketchFleetEngine:
         self._wire_ingest(ingest, queue_capacity)
         # the cohort-query cache, shared with the fleet's query_cohort path
         self.tree = agg_tree(self.fleet)
+        # the persistent sketch plane: with history=True, window expiry
+        # RETIRES content into a time-dyadic index (hot LRU of
+        # `history_hot_nodes` nodes, cold spill under `history_dir`
+        # through train/checkpoint.py) instead of discarding it —
+        # query_interval(cohort, t1, t2) then answers any historical
+        # interval.  Each tick pays one host copy of the slab for the
+        # retirement path (opt-in; see benchmarks/fleet_throughput.py).
+        self.history = None
+        if history:
+            from repro.sketch.history import (HistoryPlane,
+                                              install_query_interval)
+
+            ell = self.base.meta.get("ell")
+            if ell is None:
+                raise ValueError(
+                    f"history=True needs a sketch variant exposing its FD "
+                    f"width as meta['ell'] (a (2ℓ, d) buffer) — "
+                    f"{name!r} does not")
+            self.history = HistoryPlane(
+                streams=self.S, d=self.d, ell=int(ell),
+                window=self.window,
+                hot_capacity=history_hot_nodes, spill_dir=history_dir,
+                topology=topology)
+            self.fleet = install_query_interval(self.fleet, self.history)
 
     def _wire_ingest(self, mode: str,
                      capacity: Optional[int]) -> None:
@@ -308,6 +341,15 @@ class SketchFleetEngine:
             # scoped by transport version (a restart resets every
             # process's version in lockstep) and rebuilds in O(local)
             tree_meta = None
+        # the history plane rides in the same atomic checkpoint: hot node
+        # snapshots + pending raw units as aux leaves, the index metadata
+        # (node keys, emptiness, cold set, spill dir path) in the JSON
+        # spec — the spill dir itself stays on disk and IS part of the
+        # persisted state (cold nodes are faulted from it after restore)
+        hist_meta = None
+        if self.history is not None:
+            hist_meta, hist_arrays = self.history.state_dict()
+            aux.update(hist_arrays)
         # rows_ingested rides in the JSON spec (arbitrary-precision int —
         # an array leaf would be silently downcast by x64-disabled jax)
         return save_fleet(path, self.fleet, self.state, self.t, aux=aux,
@@ -316,7 +358,8 @@ class SketchFleetEngine:
                               "rows_ingested": int(self.rows_ingested),
                               "ingest": self.ingest,
                               "queue_capacity": self.queue.capacity,
-                              "agg_tree": tree_meta}},
+                              "agg_tree": tree_meta,
+                              "history": hist_meta}},
                           keep=keep)
 
     @classmethod
@@ -391,6 +434,20 @@ class SketchFleetEngine:
         if topology is None:
             eng.tree.load_state_dict(espec.get("agg_tree"), fc.aux,
                                      eng.state)
+        eng.window = int(spec["window"])
+        eng.history = None
+        hmeta = espec.get("history")
+        if hmeta is not None:
+            from repro.sketch.history import (HistoryPlane,
+                                              install_query_interval)
+
+            # same-partition restore only (from_state_dict raises on a
+            # mismatch): retired snapshots are per-owned-stream arrays,
+            # and silently resharding history would answer intervals
+            # from the wrong streams
+            eng.history = HistoryPlane.from_state_dict(hmeta, fc.aux,
+                                                       topology=topology)
+            eng.fleet = install_query_interval(eng.fleet, eng.history)
         return eng
 
     # -- admission ---------------------------------------------------------
@@ -490,6 +547,15 @@ class SketchFleetEngine:
         self.t += self.block
         self.rows_ingested += nrows
         self.tree.advance(self.state, touched)
+        if self.history is not None:
+            # the persistent plane is host-side: observe the slab's raw
+            # units (one host copy — the opt-in cost of history), then
+            # retire exactly the units this clock advance expired.  Idle
+            # advance_time ticks land here too (their zero slab retires
+            # as empty nodes); clock-neutral idle polls returned above.
+            self.history.observe_block(np.asarray(slab),
+                                       first_ts=self.t - self.block + 1)
+            self.history.retire_through(self.t - self.window)
         # double buffering: pack + prefetch the NEXT slab while the
         # device consumes the one just dispatched (no-op for sync)
         self.pipe.after_dispatch()
@@ -545,6 +611,27 @@ class SketchFleetEngine:
 
     def query_global(self) -> np.ndarray:
         return self.query_cohort(None)
+
+    def query_interval(self, users, t1: int, t2: int) -> np.ndarray:
+        """Time-travel query: ONE compressed ``(2ℓ, d)`` sketch of every
+        row the cohort's users ingested with timestamp in ``[t1, t2)``,
+        answered from the persistent history plane of RETIRED window
+        content (``repro.sketch.history``) — O(log(t2−t1)) dyadic node
+        merges, hot nodes served from memory, cold ones faulted in from
+        the spill tier.  ``users`` as in :meth:`query_cohort` (``None``
+        for the whole fleet).  Needs ``history=True``; only intervals
+        that have fully expired from the live window are addressable
+        (``t2 − 1 <= t − window``) — live content is ``query_cohort``'s
+        job.  Collective under a topology, like ``query_cohort``."""
+        from repro.sketch.query import as_cohort
+
+        if self.history is None:
+            raise ValueError(
+                "this engine records no history — build it with "
+                "SketchFleetEngine(..., history=True[, history_hot_nodes="
+                "..., history_dir=...]) to retire expiring window "
+                "content into the time-travel index")
+        return self.history.query_interval(t1, t2, as_cohort(users))
 
     def space(self) -> Dict[str, int]:
         """Fleet-wide live-row accounting: per-stream total + cached

@@ -8,6 +8,11 @@
   stream ranges) + ``AggTree`` cached merge trees; ``query_cohort``
   answers aggregate queries over any cohort in O(log S) warm node merges
   (``merge_streams`` is its deprecated whole-fleet alias).
+* ``history``  — the persistent sketch plane: expiring window content is
+  *retired* into a time-dyadic index of compressed (2ℓ, d) snapshots
+  (hot LRU tier + cold spill through ``train/checkpoint.py``), so
+  ``query_interval`` answers ANY historical interval ``[t1, t2)`` in
+  O(log(t2−t1)) node merges with the FD additive-error guarantee.
 * ``monitor``  — SlidingGradSketch: windowed streaming PCA of gradients.
 * ``compress`` — FD low-rank gradient compression with error feedback for
   the cross-pod all-reduce.
@@ -17,8 +22,10 @@
 
 from repro.sketch.api import ALL, AggTree, Cohort, FleetSpace, \
     SlidingSketch, agg_tree, available_sketches, make_sketch, \
-    merge_streams, query_cohort, register, shard_streams, \
-    vmap_streams                                                # noqa: F401
+    merge_streams, query_cohort, query_interval, register, \
+    shard_streams, vmap_streams                                 # noqa: F401
+from repro.sketch.history import HistoryPlane, dyadic_cover, \
+    install_query_interval, interval_merge_budget               # noqa: F401
 from repro.sketch.monitor import SketchConfig, sketch_init, sketch_update, \
     sketch_query, subspace_drift                                # noqa: F401
 from repro.sketch.compress import CompressConfig, compress_grads, \

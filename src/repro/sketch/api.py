@@ -103,6 +103,16 @@ class SlidingSketch(NamedTuple):
     of streams from the fleet's cached :class:`AggTree`.  Only fleets
     (``vmap_streams`` / ``shard_streams``) implement it; single sketches
     carry a raiser explaining how to get one.
+
+    ``query_interval(state, t1, t2, cohort=ALL)`` is the time-travel
+    entry point: the ``(2ℓ, d)`` sketch of everything the cohort ingested
+    with timestamps in ``[t1, t2)``, served from the persistent history
+    plane of *retired* (expired-from-window) content
+    (``repro.sketch.history``).  Live only on fleets with a history plane
+    attached (``SketchFleetEngine(..., history=True)`` or
+    ``install_query_interval``); single sketches, host baselines, and
+    history-less fleets carry explanatory raisers — the same rollout
+    shape as ``query_cohort``.
     """
 
     name: str
@@ -115,6 +125,7 @@ class SlidingSketch(NamedTuple):
     space: Callable[[Any], Any]
     merge: Callable[..., Any]
     query_cohort: Optional[Callable[..., Any]] = None
+    query_interval: Optional[Callable[..., Any]] = None
 
 
 class FleetSpace(NamedTuple):
@@ -193,6 +204,28 @@ def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
                 "query_cohort(state, cohort, t)")
 
         sk = sk._replace(query_cohort=_no_cohort)
+    if sk.query_interval is None:
+        if sk.meta.get("backend") == "host":
+
+            def _no_interval(state, t1=None, t2=None, cohort=None, *,
+                             _name=name):
+                raise ValueError(
+                    f"{_name!r} is a host-side baseline — query_interval "
+                    "(time-travel over retired window content) is served "
+                    "by the JAX fleet path only: serve a JAX variant "
+                    "through SketchFleetEngine(..., history=True)")
+        else:
+
+            def _no_interval(state, t1=None, t2=None, cohort=None, *,
+                             _name=name):
+                raise ValueError(
+                    f"{_name!r} is a single sketch — time-travel interval "
+                    "queries need a fleet with a history plane: serve it "
+                    "through SketchFleetEngine(..., history=True), or lift "
+                    "it with vmap_streams and attach a plane via "
+                    "repro.sketch.history.install_query_interval")
+
+        sk = sk._replace(query_interval=_no_interval)
     sk.meta["spec"] = {"name": name, "d": int(d), "eps": float(eps),
                        "window": int(window), "hyper": dict(hyper)}
     if key is not None:
@@ -516,8 +549,18 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
                           total=jnp.sum(per) + cache_rows,
                           cache_rows=cache_rows)
 
+    fleet_name = f"vmap[{sk.name}x{S}]"
+
+    def _no_interval(state, t1=None, t2=None, cohort=None):
+        raise ValueError(
+            f"fleet {fleet_name!r} has no history plane — time-travel "
+            "interval queries need retired window content to be recorded: "
+            "serve the fleet through SketchFleetEngine(..., history=True) "
+            "or attach a plane with "
+            "repro.sketch.history.install_query_interval(fleet, plane)")
+
     return SlidingSketch(
-        name=f"vmap[{sk.name}x{S}]",
+        name=fleet_name,
         meta=dict(sk.meta, streams=S, base=sk, agg_box=agg_box),
         init=init,
         update=update,
@@ -527,6 +570,7 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
         space=space,
         merge=merge,
         query_cohort=query_cohort,
+        query_interval=_no_interval,
     )
 
 
@@ -550,6 +594,27 @@ def query_cohort(fleet: SlidingSketch, state, cohort=ALL, t=None):
             f"query_cohort needs a fleet from vmap_streams/shard_streams, "
             f"got {fleet.name!r}")
     return fleet.query_cohort(state, cohort, t)
+
+
+def query_interval(fleet: SlidingSketch, state, t1, t2, cohort=ALL):
+    """Time-travel query: ONE compressed ``(2ℓ, d)`` sketch of every row
+    the ``cohort``'s streams ingested with timestamp in ``[t1, t2)``,
+    answered from the fleet's persistent history plane of *retired*
+    (expired-from-window) content — ``O(log(t2 − t1))`` dyadic node
+    merges, under the FD mergeability additive-error guarantee.
+
+    Needs a fleet with a plane attached (``SketchFleetEngine(...,
+    history=True)`` or ``repro.sketch.history.install_query_interval``);
+    anything else raises with directions.  See ``repro.sketch.history``
+    for the canonical dyadic schedule the answer is pinned to.
+    """
+    if fleet.query_interval is None:
+        raise ValueError(
+            f"query_interval needs a fleet with a history plane, got "
+            f"{fleet.name!r} — serve it through SketchFleetEngine(..., "
+            "history=True) or attach a plane with "
+            "repro.sketch.history.install_query_interval")
+    return fleet.query_interval(state, t1, t2, cohort)
 
 
 def agg_tree(fleet: SlidingSketch) -> AggTree:
@@ -695,6 +760,7 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         space=fleet.space,
         merge=fleet.merge,
         query_cohort=fleet.query_cohort,
+        query_interval=fleet.query_interval,
     )
 
 
@@ -758,6 +824,7 @@ def _shard_streams_topology(sk: SlidingSketch, S: int, mesh, axis: str,
         space=space,
         merge=local.merge,
         query_cohort=query_cohort,
+        query_interval=local.query_interval,
     )
 
 

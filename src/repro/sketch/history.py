@@ -1,0 +1,720 @@
+"""Persistent sketch plane: time-travel interval queries over retired
+window content, tiered hot (in-memory LRU) / cold (spilled through the
+shared ``train/checkpoint.py`` persistence layer).
+
+The sliding-window engine discards everything older than the window: the
+moment the clock passes ``ts + window`` the AggTree garbage-collects its
+cached aggregates and the raw rows are gone.  This module *retires* that
+expiring content instead — every expired clock unit becomes a leaf of a
+time-dyadic index of compressed ``(2ℓ, d)`` FD snapshots, so ANY
+historical interval ``[t1, t2)`` stays answerable forever by merging the
+``O(log(t2 − t1))`` maximal dyadic nodes that cover it, with the FD
+mergeability guarantee (merging sketches of A and B is a valid sketch of
+``[A; B]`` under the same additive covariance-error bound).
+
+Canonical dyadic schedule — the correctness contract
+----------------------------------------------------
+``query_interval`` answers are pinned *bit-identical* to a from-scratch
+fold of the raw rows through this exact schedule (the test-suite oracle
+reimplements it independently):
+
+* **Units.** Clock unit ``u`` (``u ≥ 1``) holds, per stream, the single
+  row stamped ``ts == u`` (the engine stamps one row per stream per clock
+  unit; a stream with nothing queued contributes the zero row, which FD
+  absorption skips).  The unit's per-stream snapshot is
+  ``fd_compress(rows_of_stream_at_u, ell)`` — a ``(2ℓ, d)`` buffer; the
+  zero row compresses to the zero buffer.
+* **Empty units / nodes.** A node is *empty* iff no stream has a nonzero
+  row anywhere in its span (idle ``advance_time`` ticks, unit 0).  Empty
+  nodes are **identities of the schedule by definition**: a parent with
+  one empty child IS the other child, verbatim, and empty nodes are
+  skipped in the time fold.  (This is part of the schedule, not an
+  optimization claim: re-absorbing a full FD buffer shrinks it, so
+  "merge with an empty sketch" is NOT bitwise the same as re-compression
+  — the identity rule is what both the plane and the oracle follow.)
+* **Time axis.** Node ``(L, i)`` spans units ``[i·2^L, (i+1)·2^L)``; a
+  non-empty parent is the per-stream vmapped pairwise merge
+  ``fd_compress(concat(left[s], right[s]), ell)`` of its children.
+* **Stream axis.** The cohort restriction of a node folds its per-stream
+  snapshots with the SAME midpoint recursion as the live query plane:
+  canonical segments from :func:`~repro.sketch.query.canonical_cover`
+  over ``[0, S)``, each segment reduced by splitting at
+  ``mid = (lo + hi) // 2``, segments then folded left in cohort order.
+  Because multi-host partitions are canonical subtrees of that very
+  recursion, the 2-process composition over the
+  :class:`~repro.parallel.topology.FleetTopology` spine is bit-identical
+  to the single-host fold.
+* **Answer.** The interval answer folds the cover nodes' cohort values
+  left in time order (empties skipped); an all-empty interval is the zero
+  ``(2ℓ, d)`` buffer.
+
+Tiering
+-------
+Nodes are immutable once built, which makes the cold tier write-once:
+the hot tier is a bounded LRU of per-stream ``(S, 2ℓ, d)`` arrays; an
+evicted node is spilled to ``spill_dir/node_<L>_<idx>/`` through
+``train/checkpoint.py``'s atomic manifest+npy layout (and faulted back
+transparently on access — a fault never deletes the disk copy).  Spill
+directories carry the :data:`~repro.train.checkpoint.HISTORY_MARKER`
+sentinel file, which the checkpoint layer's retention/sweep paths treat
+as off-limits: a history tier under a checkpoint root can never be
+pruned or renamed-aside by ``_retain``/re-save.
+
+Wiring
+------
+:class:`~repro.serve.engine.SketchFleetEngine` owns a plane when built
+with ``history=True``: every ``step()`` that advances the clock (idle
+``advance_time=True`` ticks included) observes the slab and retires the
+units that just fell off the window; ``checkpoint``/``from_checkpoint``
+persist the index (hot nodes as aux leaves, metadata in the manifest,
+the spill dir by path) so a restored engine answers ``query_interval``
+identically.  Under a topology every process holds only its owned stream
+range's snapshots and ``query_interval`` is a collective (same contract
+as ``PartitionedAggTree.query``: every process must issue the same
+interval-query sequence).
+"""
+
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fd import fd_compress
+from repro.sketch.query import ALL, as_cohort, canonical_cover
+from repro.train.checkpoint import HISTORY_MARKER
+
+NodeKey = Tuple[int, int]        # (level L, index i): units [i·2^L, (i+1)·2^L)
+
+
+# ---------------------------------------------------------------------------
+# Dyadic time decomposition
+# ---------------------------------------------------------------------------
+
+
+def dyadic_cover(t1: int, t2: int) -> List[NodeKey]:
+    """The maximal aligned dyadic nodes covering ``[t1, t2)``, left to
+    right: greedily take the largest node starting at the cursor that is
+    both alignment-compatible and fits inside the interval.  At most
+    ``2⌈log₂(t2 − t1)⌉`` nodes (the classic sparse-table bound), so the
+    warm interval fold is ``len(cover) − 1 ≤ 2⌈log₂(t2 − t1)⌉`` merges."""
+    lo, hi = int(t1), int(t2)
+    if not 0 <= lo < hi:
+        raise ValueError(f"dyadic_cover needs 0 <= t1 < t2, got [{lo}, {hi})")
+    out: List[NodeKey] = []
+    t = lo
+    while t < hi:
+        L = 63 if t == 0 else (t & -t).bit_length() - 1
+        while t + (1 << L) > hi:
+            L -= 1
+        out.append((L, t >> L))
+        t += 1 << L
+    return out
+
+
+def interval_merge_budget(t1: int, t2: int) -> int:
+    """The acceptance bound on warm node merges: ``2⌈log₂(t2 − t1)⌉``."""
+    length = int(t2) - int(t1)
+    return 2 * int(np.ceil(np.log2(length))) if length > 1 else 0
+
+
+# ---------------------------------------------------------------------------
+# The jitted FD ops (one compile per (ell, d) configuration)
+# ---------------------------------------------------------------------------
+
+_OPS: Dict[Tuple[int, int], Dict[str, Any]] = {}
+
+
+def _ops(ell: int, d: int) -> Dict[str, Any]:
+    key = (int(ell), int(d))
+    ops = _OPS.get(key)
+    if ops is None:
+
+        def compress_unit(rows):                 # (k, d) -> (2ℓ, d)
+            return fd_compress(rows, ell)
+
+        def merge2(a, b):                        # (2ℓ, d) × (2ℓ, d)
+            return fd_compress(jnp.concatenate([a, b], axis=0), ell)
+
+        ops = _OPS[key] = {
+            # (S, U, 1, d) unit rows -> (S, U, 2ℓ, d) unit snapshots
+            "units": jax.jit(jax.vmap(jax.vmap(compress_unit))),
+            # per-stream pairwise parent build: (S, 2ℓ, d) × (S, 2ℓ, d)
+            "vmerge": jax.jit(jax.vmap(merge2)),
+            # the scalar merge the stream/time folds use
+            "merge2": jax.jit(merge2),
+        }
+    return ops
+
+
+# ---------------------------------------------------------------------------
+# Tiered node storage: hot LRU over a write-once cold spill
+# ---------------------------------------------------------------------------
+
+
+class _NodeStore:
+    """Hot/cold tiers for the immutable per-stream node snapshots.
+
+    ``hot`` is an LRU ``OrderedDict`` of ``(S_local, 2ℓ, d)`` float32
+    arrays; when it exceeds ``hot_capacity`` the least-recently-used node
+    is spilled (write-once: re-evicting an already-spilled node is free)
+    into its own ``node_<L>_<idx>/`` directory under ``spill_dir`` via
+    ``train/checkpoint.py``'s atomic save.  ``get`` faults cold nodes
+    back in transparently.  Empty nodes are membership in ``empty`` —
+    they carry no array and never touch the disk."""
+
+    def __init__(self, hot_capacity: Optional[int] = None,
+                 spill_dir: Optional[str] = None):
+        if hot_capacity is not None:
+            hot_capacity = int(hot_capacity)
+            if hot_capacity < 1:
+                raise ValueError(
+                    f"history hot capacity must be >= 1, got {hot_capacity}")
+            if spill_dir is None:
+                raise ValueError(
+                    "a bounded history hot tier needs somewhere to spill: "
+                    "pass history_dir (evicting without a cold tier would "
+                    "silently DROP retired nodes), or leave the hot "
+                    "capacity unbounded")
+        self.hot: "OrderedDict[NodeKey, np.ndarray]" = OrderedDict()
+        self.empty: Set[NodeKey] = set()
+        self.on_disk: Set[NodeKey] = set()
+        self.hot_capacity = hot_capacity
+        self.spill_dir = (None if spill_dir is None
+                          else os.path.abspath(spill_dir))
+        self.spills = 0
+        self.faults = 0
+        self.evictions = 0
+        if self.spill_dir is not None:
+            self._mark(self.spill_dir)
+
+    @staticmethod
+    def _mark(path: str) -> None:
+        """Create ``path`` and plant the retention-guard marker the
+        checkpoint layer honours (see ``HISTORY_MARKER``)."""
+        os.makedirs(path, exist_ok=True)
+        marker = os.path.join(path, HISTORY_MARKER)
+        if not os.path.exists(marker):
+            with open(marker, "w") as f:
+                f.write("sketch history spill tier — retention must "
+                        "never prune or rename this directory\n")
+
+    def _node_dir(self, key: NodeKey) -> str:
+        return os.path.join(self.spill_dir,
+                            f"node_{key[0]:02d}_{key[1]:08d}")
+
+    def exists(self, key: NodeKey) -> bool:
+        return (key in self.empty or key in self.hot
+                or key in self.on_disk)
+
+    def is_empty(self, key: NodeKey) -> bool:
+        return key in self.empty
+
+    def put(self, key: NodeKey, arr: Optional[np.ndarray]) -> None:
+        if self.exists(key):
+            raise RuntimeError(
+                f"history node {key} retired twice — each clock unit "
+                "must be retired exactly once")
+        if arr is None:
+            self.empty.add(key)
+            return
+        self.hot[key] = arr
+        self.hot.move_to_end(key)
+        self._evict_to_cap()
+
+    def get(self, key: NodeKey) -> Optional[np.ndarray]:
+        """The node's ``(S_local, 2ℓ, d)`` snapshot (``None`` if empty),
+        faulting it back from the cold tier when necessary."""
+        if key in self.empty:
+            return None
+        arr = self.hot.get(key)
+        if arr is not None:
+            self.hot.move_to_end(key)
+            return arr
+        if key not in self.on_disk:
+            raise KeyError(f"history node {key} was never retired")
+        from repro.train import checkpoint as ckpt
+
+        tree, _ = ckpt.restore(self._node_dir(key),
+                               {"per_stream": np.zeros((), np.float32)})
+        arr = np.asarray(tree["per_stream"])
+        self.faults += 1
+        self.hot[key] = arr
+        self.hot.move_to_end(key)
+        self._evict_to_cap()
+        return arr
+
+    def _evict_to_cap(self) -> None:
+        if self.hot_capacity is None:
+            return
+        while len(self.hot) > self.hot_capacity:
+            key, arr = self.hot.popitem(last=False)
+            self.evictions += 1
+            if key not in self.on_disk:
+                self._spill(key, arr)
+
+    def _spill(self, key: NodeKey, arr: np.ndarray) -> None:
+        from repro.train import checkpoint as ckpt
+
+        node_dir = self._node_dir(key)
+        self._mark(node_dir)
+        ckpt.save(node_dir, 0, {"per_stream": arr}, keep=1)
+        self.on_disk.add(key)
+        self.spills += 1
+
+    def spill_bytes(self) -> int:
+        """On-disk footprint of the cold tier (0 without a spill dir)."""
+        if self.spill_dir is None or not os.path.isdir(self.spill_dir):
+            return 0
+        total = 0
+        for root, _, files in os.walk(self.spill_dir):
+            for f in files:
+                try:
+                    total += os.path.getsize(os.path.join(root, f))
+                except OSError:
+                    pass
+        return total
+
+
+# ---------------------------------------------------------------------------
+# HistoryPlane — the persistent sketch plane
+# ---------------------------------------------------------------------------
+
+
+class HistoryPlane:
+    """The time-dyadic index of retired window content (module docstring).
+
+    Single-host unless ``topology`` is given, in which case this process
+    holds only its owned stream range ``[topology.lo, topology.hi)`` and
+    ``query_interval`` is a collective over ``topology.transport``.
+
+    Counters: ``retired_units`` (level-0 insertions, exactly once per
+    expired clock unit), ``consolidations`` (parent builds — amortized
+    one per unit), ``time_merges`` / ``stream_merges`` (query-side folds
+    along each axis), plus the store's ``spills`` / ``faults`` /
+    ``evictions`` and the collective's ``remote_fetches`` /
+    ``published``."""
+
+    def __init__(self, *, streams: int, d: int, ell: int, window: int,
+                 hot_capacity: Optional[int] = None,
+                 spill_dir: Optional[str] = None,
+                 topology=None, namespace: str = "fleet"):
+        self.S = int(streams)
+        self.topology = topology
+        if topology is not None:
+            if topology.S != self.S:
+                raise ValueError(
+                    f"topology covers {topology.S} streams but the history "
+                    f"plane was asked for {self.S}")
+            self.lo, self.hi = topology.lo, topology.hi
+            self._ns = topology.namespace
+        else:
+            self.lo, self.hi = 0, self.S
+            self._ns = str(namespace)
+        self.S_local = self.hi - self.lo
+        self.d, self.ell, self.window = int(d), int(ell), int(window)
+        self.m = 2 * self.ell
+        self.store = _NodeStore(hot_capacity, spill_dir)
+        self._pending: Dict[int, np.ndarray] = {}    # unit ts -> (S_local, d)
+        self.retired_through = 0          # every unit <= this is retired
+        self._max_unit = 0
+        self.retired_units = 0
+        self.retire_events = 0
+        self.consolidations = 0
+        self.time_merges = 0
+        self.stream_merges = 0
+        self.remote_fetches = 0
+        self.published = 0
+        self._published: Set[str] = set()
+        # (key, lo, hi) -> reduced (2ℓ, d) value of a canonical stream
+        # segment of one node — the warm tier of the query path (nodes
+        # are immutable, so entries never go stale; bounded like the
+        # AggTree result memo)
+        self._reduced: Dict[Tuple[NodeKey, int, int],
+                            Optional[np.ndarray]] = {}
+        # fetched remote atoms / emptiness flags — immutable, cached forever
+        self._remote: Dict[str, Any] = {}
+        self._fd = _ops(self.ell, self.d)
+        # unit 0 can never carry a row (timestamps start at 1) but the
+        # dyadic index is built over [0, ·): seed it empty so every
+        # consolidation carry chain is anchored at the origin
+        self.store.put((0, 0), None)
+
+    # -- ingest-side: observe live slabs, retire expired units --------------
+
+    def observe_block(self, slab: np.ndarray, first_ts: int) -> None:
+        """Record one tick's raw slab (``(S_local, block, d)``, column j
+        stamped ``first_ts + j``) so its units can be compressed when the
+        window later expires them.  All-zero columns (idle ticks, no
+        pending rows anywhere) are recorded by *absence* — they retire as
+        empty nodes."""
+        slab = np.asarray(slab)
+        if slab.shape[0] != self.S_local or slab.shape[2] != self.d:
+            raise ValueError(
+                f"slab shape {slab.shape} does not match the plane's "
+                f"(S_local={self.S_local}, ·, d={self.d})")
+        for j in range(slab.shape[1]):
+            u = int(first_ts) + j
+            if u <= self.retired_through:
+                raise ValueError(
+                    f"unit {u} was already retired (retired_through="
+                    f"{self.retired_through}) — observe_block must run "
+                    "before the tick's retirement")
+            col = slab[:, j, :]
+            if col.any():
+                self._pending[u] = np.array(col, np.float32, copy=True)
+
+    def retire_through(self, t: int) -> int:
+        """Retire every clock unit ``<= t`` that is not yet retired (the
+        engine passes ``t = clock − window``: exactly the units that just
+        fell off the sliding window).  Idempotent — re-invoking with the
+        same ``t`` retires nothing.  Returns the number of units retired."""
+        t = int(t)
+        if t <= self.retired_through:
+            return 0
+        units = list(range(self.retired_through + 1, t + 1))
+        # one batched double-vmapped compress for every non-empty unit
+        live = [u for u in units if u in self._pending]
+        snaps: Dict[int, np.ndarray] = {}
+        if live:
+            stacked = np.stack([self._pending[u] for u in live],
+                               axis=1)[:, :, None, :]   # (S, U, 1, d)
+            out = np.asarray(self._fd["units"](jnp.asarray(stacked)))
+            for k, u in enumerate(live):
+                snaps[u] = out[:, k]
+        for u in units:
+            self._pending.pop(u, None)
+            self.store.put((0, u), snaps.get(u))
+            self.retired_units += 1
+            self._max_unit = u
+            self._consolidate(u)
+        self.retired_through = t
+        self.retire_events += 1
+        return len(units)
+
+    def _consolidate(self, u: int) -> None:
+        """Binary-carry consolidation: whenever the just-inserted node
+        completes a sibling pair, build the parent (amortized one vmapped
+        merge per unit over the plane's lifetime)."""
+        L, i = 0, u
+        while i & 1:
+            left, right = (L, i - 1), (L, i)
+            if self.store.is_empty(left) and self.store.is_empty(right):
+                parent = None
+            elif self.store.is_empty(left):
+                parent = self.store.get(right)      # identity: share the
+            elif self.store.is_empty(right):        # non-empty child
+                parent = self.store.get(left)
+            else:
+                parent = np.asarray(self._fd["vmerge"](
+                    jnp.asarray(self.store.get(left)),
+                    jnp.asarray(self.store.get(right))))
+                self.consolidations += 1
+            self.store.put((L + 1, i >> 1), parent)
+            L, i = L + 1, i >> 1
+
+    # -- query-side: interval folds -----------------------------------------
+
+    def query_interval(self, t1: int, t2: int, cohort=ALL) -> np.ndarray:
+        """The ``(2ℓ, d)`` FD sketch of every row the ``cohort``'s streams
+        ingested with timestamp in ``[t1, t2)`` — bit-identical to the
+        canonical dyadic schedule (module docstring) over the raw rows.
+
+        Only *retired* history is addressable: ``t2 − 1`` must not reach
+        past ``retired_through`` (= engine clock − window).  Warm queries
+        (hot nodes + memoized segment reductions) cost
+        ``len(cover) − 1 ≤ 2⌈log₂(t2 − t1)⌉`` node merges; cold nodes
+        fault in from the spill tier transparently.  Collective under a
+        topology (every process must issue the same query)."""
+        t1, t2 = int(t1), int(t2)
+        if not 0 <= t1 < t2:
+            raise ValueError(
+                f"query_interval needs 0 <= t1 < t2, got [{t1}, {t2})")
+        if t2 - 1 > self.retired_through:
+            raise ValueError(
+                f"interval [{t1}, {t2}) reaches into the live window: "
+                f"only timestamps <= {self.retired_through} (engine clock "
+                f"minus window={self.window}) have retired into history — "
+                "query live content with query/query_cohort instead")
+        ranges = as_cohort(cohort).resolve(self.S)
+        segs: List[Tuple[int, int]] = []
+        for lo, hi in ranges:
+            canonical_cover(0, self.S, lo, hi, segs)
+        cover = dyadic_cover(t1, t2)
+        if self.topology is not None and self.topology.P > 1:
+            return self._query_collective(cover, segs)
+        acc = None
+        for key in cover:
+            if self.store.is_empty(key):
+                continue
+            v = self._cohort_value(key, segs)
+            acc = v if acc is None else self._tmerge(acc, v)
+        return (np.zeros((self.m, self.d), np.float32) if acc is None
+                else acc)
+
+    def _cohort_value(self, key: NodeKey, segs) -> np.ndarray:
+        acc = None
+        for lo, hi in segs:
+            v = self._seg_value(key, lo, hi)
+            acc = v if acc is None else self._smerge(acc, v)
+        return acc
+
+    def _seg_value(self, key: NodeKey, lo: int, hi: int) -> np.ndarray:
+        """Reduced value of one canonical stream segment (GLOBAL indices,
+        single-owner: ``[lo, hi) ⊆ [self.lo, self.hi)``) of one node,
+        memoized — nodes are immutable so entries never go stale."""
+        rkey = (key, lo, hi)
+        hit = self._reduced.get(rkey)
+        if hit is not None:
+            return hit
+        if self.store.is_empty(key):
+            # a locally-empty node of a globally non-empty cover entry:
+            # every per-stream snapshot is the zero buffer, and the zero
+            # buffer is a fixed point of the merge — the fold is zeros
+            v = np.zeros((self.m, self.d), np.float32)
+        else:
+            arr = self.store.get(key)
+
+            def rec(a: int, b: int):
+                if b - a == 1:
+                    return arr[a - self.lo]
+                mid = (a + b) // 2
+                return self._smerge(rec(a, mid), rec(mid, b))
+
+            v = np.asarray(rec(lo, hi))
+        if len(self._reduced) >= 4096:
+            self._reduced.clear()
+        self._reduced[rkey] = v
+        return v
+
+    def _tmerge(self, a, b) -> np.ndarray:
+        self.time_merges += 1
+        return np.asarray(self._fd["merge2"](jnp.asarray(a),
+                                             jnp.asarray(b)))
+
+    def _smerge(self, a, b) -> np.ndarray:
+        self.stream_merges += 1
+        return np.asarray(self._fd["merge2"](jnp.asarray(a),
+                                             jnp.asarray(b)))
+
+    # -- the collective (FleetTopology) query path --------------------------
+
+    def _query_collective(self, cover, segs) -> np.ndarray:
+        """Multi-host interval fold: publish-before-fetch over the
+        topology transport (matched collectives cannot deadlock), then
+        the same canonical fold with remote single-owner atoms fetched as
+        compressed ``(2ℓ, d)`` values.  Keys are version-free — retired
+        nodes are immutable, so a fetched atom is cached forever."""
+        topo = self.topology
+        atoms: List[Tuple[int, int]] = []
+        for lo, hi in segs:
+            self._atoms(lo, hi, atoms)
+        for key in cover:
+            self._publish_flag(key)
+            for lo, hi in atoms:
+                if topo.owner_of_range(lo, hi) == topo.pid:
+                    self._publish_atom(key, lo, hi)
+        acc = None
+        for key in cover:
+            if self._global_empty(key):
+                continue
+            v = None
+            for lo, hi in segs:
+                sv = self._gseg(key, lo, hi)
+                v = sv if v is None else self._smerge(v, sv)
+            acc = v if acc is None else self._tmerge(acc, v)
+        return (np.zeros((self.m, self.d), np.float32) if acc is None
+                else acc)
+
+    def _atoms(self, lo: int, hi: int,
+               out: List[Tuple[int, int]]) -> None:
+        """Split a canonical range at ownership boundaries into maximal
+        single-owner canonical nodes (mirrors ``PartitionedAggTree``)."""
+        if self.topology.owner_of_range(lo, hi) is not None:
+            out.append((lo, hi))
+            return
+        mid = (lo + hi) // 2
+        self._atoms(lo, mid, out)
+        self._atoms(mid, hi, out)
+
+    def _flag_key(self, key: NodeKey, pid: int) -> str:
+        return f"{self._ns}/hist/e{key[0]:02d}-{key[1]:08d}/p{pid}"
+
+    def _atom_key(self, key: NodeKey, lo: int, hi: int) -> str:
+        return (f"{self._ns}/hist/n{key[0]:02d}-{key[1]:08d}/"
+                f"{lo:06d}-{hi:06d}")
+
+    def _publish_flag(self, key: NodeKey) -> None:
+        k = self._flag_key(key, self.topology.pid)
+        if k in self._published:
+            return
+        self.topology.transport.publish(
+            k, b"1" if self.store.is_empty(key) else b"0")
+        self._published.add(k)
+
+    def _publish_atom(self, key: NodeKey, lo: int, hi: int) -> None:
+        from repro.parallel.topology import pack_state
+
+        k = self._atom_key(key, lo, hi)
+        if k in self._published:
+            return
+        self.topology.transport.publish(
+            k, pack_state({"buf": self._seg_value(key, lo, hi)}))
+        self._published.add(k)
+        self.published += 1
+
+    def _global_empty(self, key: NodeKey) -> bool:
+        """A node is skipped by the time fold only when it is empty on
+        EVERY process — local emptiness says nothing about the other
+        owners' streams, so the flags are a (cached, immutable) vote."""
+        for p in range(self.topology.P):
+            if p == self.topology.pid:
+                if not self.store.is_empty(key):
+                    return False
+                continue
+            k = self._flag_key(key, p)
+            flag = self._remote.get(k)
+            if flag is None:
+                flag = self.topology.transport.fetch(
+                    k, self.topology.timeout_s)
+                self._remote[k] = flag
+            if flag != b"1":
+                return False
+        return True
+
+    def _gseg(self, key: NodeKey, lo: int, hi: int) -> np.ndarray:
+        """Global-index segment value: owned ranges reduce locally, remote
+        single-owner atoms are fetched, spine ranges recurse at the same
+        canonical midpoint — bit-identical to the single-host fold."""
+        from repro.parallel.topology import unpack_state
+
+        topo = self.topology
+        owner = topo.owner_of_range(lo, hi)
+        if owner == topo.pid:
+            return self._seg_value(key, lo, hi)
+        k = self._atom_key(key, lo, hi)
+        hit = self._remote.get(k)
+        if hit is not None:
+            return hit
+        if owner is not None:
+            tpl = {"buf": np.zeros((self.m, self.d), np.float32)}
+            v = np.asarray(unpack_state(
+                topo.transport.fetch(k, topo.timeout_s), tpl)["buf"])
+            self.remote_fetches += 1
+        else:
+            mid = (lo + hi) // 2
+            v = self._smerge(self._gseg(key, lo, mid),
+                             self._gseg(key, mid, hi))
+        self._remote[k] = v
+        return v
+
+    # -- accounting ---------------------------------------------------------
+
+    @property
+    def merges(self) -> int:
+        """Query-side node merges (time + stream folds)."""
+        return self.time_merges + self.stream_merges
+
+    def space(self) -> Dict[str, int]:
+        return {"hot_nodes": len(self.store.hot),
+                "empty_nodes": len(self.store.empty),
+                "cold_nodes": len(self.store.on_disk),
+                "pending_units": len(self._pending),
+                "spill_bytes": self.store.spill_bytes()}
+
+    # -- persistence (rides inside the engine checkpoint) -------------------
+
+    def state_dict(self) -> Tuple[Dict[str, Any], Dict[str, np.ndarray]]:
+        """``(meta, arrays)``: JSON-able index metadata + the aux arrays
+        (hot node snapshots, pending raw units) that ride as extra leaves
+        of the engine checkpoint.  Cold nodes stay where they are — the
+        spill dir IS part of the persisted state (recorded by path)."""
+        meta = {
+            "scope": [self.lo, self.hi],
+            "streams": self.S, "d": self.d, "ell": self.ell,
+            "window": self.window,
+            "retired_through": self.retired_through,
+            "max_unit": self._max_unit,
+            "retired_units": self.retired_units,
+            "hot_capacity": self.store.hot_capacity,
+            "spill_dir": self.store.spill_dir,
+            "empty": sorted([L, i] for L, i in self.store.empty),
+            "on_disk": sorted([L, i] for L, i in self.store.on_disk),
+            "hot": [[L, i] for L, i in self.store.hot],   # LRU order
+            "pending_ts": sorted(self._pending),
+        }
+        arrays = {f"hist_{L:02d}_{i:08d}": arr
+                  for (L, i), arr in self.store.hot.items()}
+        if self._pending:
+            arrays["hist_pending"] = np.stack(
+                [self._pending[u] for u in sorted(self._pending)])
+        return meta, arrays
+
+    @classmethod
+    def from_state_dict(cls, meta: Dict[str, Any],
+                        aux: Dict[str, np.ndarray],
+                        topology=None) -> "HistoryPlane":
+        """Rebuild a plane from :meth:`state_dict` output.  The restoring
+        partition must match the saving one — history snapshots are
+        per-owned-stream arrays and are NOT resharded elastically (raise,
+        don't silently answer from somebody else's slice)."""
+        scope = [topology.lo, topology.hi] if topology is not None \
+            else [0, int(meta["streams"])]
+        if list(meta["scope"]) != scope:
+            raise ValueError(
+                f"history restore needs the same stream partition: the "
+                f"checkpoint holds scope {list(meta['scope'])} but this "
+                f"process owns {scope} — restore with the saving "
+                "topology (elastic resharding of retired history is not "
+                "supported)")
+        plane = cls(streams=int(meta["streams"]), d=int(meta["d"]),
+                    ell=int(meta["ell"]), window=int(meta["window"]),
+                    hot_capacity=meta.get("hot_capacity"),
+                    spill_dir=meta.get("spill_dir"), topology=topology)
+        store = plane.store
+        store.empty = {(int(L), int(i)) for L, i in meta["empty"]}
+        store.on_disk = {(int(L), int(i)) for L, i in meta["on_disk"]}
+        if store.on_disk and (store.spill_dir is None
+                              or not os.path.isdir(store.spill_dir)):
+            raise FileNotFoundError(
+                f"the checkpoint's history index references "
+                f"{len(store.on_disk)} cold node(s) under spill dir "
+                f"{meta.get('spill_dir')!r}, which no longer exists — "
+                "the spill directory is part of the persisted state")
+        store.hot.clear()
+        for L, i in meta["hot"]:               # preserves LRU order
+            store.hot[(int(L), int(i))] = np.asarray(
+                aux[f"hist_{int(L):02d}_{int(i):08d}"])
+        plane.retired_through = int(meta["retired_through"])
+        plane._max_unit = int(meta["max_unit"])
+        plane.retired_units = int(meta["retired_units"])
+        pend_ts = [int(u) for u in meta.get("pending_ts", [])]
+        if pend_ts:
+            rows = np.asarray(aux["hist_pending"])
+            for k, u in enumerate(pend_ts):
+                plane._pending[u] = np.asarray(rows[k], np.float32)
+        return plane
+
+
+# ---------------------------------------------------------------------------
+# Protocol wiring
+# ---------------------------------------------------------------------------
+
+
+def install_query_interval(fleet, plane: HistoryPlane):
+    """Attach a history plane to a fleet: returns the fleet with a live
+    ``query_interval(state, t1, t2, cohort=ALL)`` (the ``state`` argument
+    is accepted for protocol symmetry — retired history lives host-side
+    in the plane, not in the device state) and ``meta['hist_box']``
+    carrying the plane for introspection."""
+
+    def query_interval(state, t1, t2, cohort=ALL):
+        return plane.query_interval(t1, t2, cohort)
+
+    return fleet._replace(
+        meta=dict(fleet.meta, hist_box={"plane": plane}),
+        query_interval=query_interval)

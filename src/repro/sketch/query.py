@@ -281,6 +281,10 @@ class AggTree:
         self._last_tkey = None                 # most recent query time tag
         self.merges = 0                        # cumulative node merges
         self.resets = 0                        # wholesale invalidations
+        # cumulative nodes garbage-collected by advance()/dirty() — the
+        # conservation counterpart of the history plane's retired_units
+        # (tests pin evicted == retired on a shared clock sequence)
+        self.evicted_nodes = 0
 
     # -- cache lifecycle ----------------------------------------------------
 
@@ -326,6 +330,7 @@ class AggTree:
         """
         self._results.clear()
         if touched is None:
+            self.evicted_nodes += len(self._nodes)
             self._nodes.clear()
         else:
             self.dirty(touched)
@@ -333,6 +338,7 @@ class AggTree:
                      if v[0] != self._last_tkey]
             for k in stale:
                 del self._nodes[k]
+            self.evicted_nodes += len(stale)
         self._adopt(state)
 
     def dirty(self, streams: Iterable[int]) -> int:
@@ -350,6 +356,7 @@ class AggTree:
         for k in evict:
             del self._nodes[k]
         self._results.clear()
+        self.evicted_nodes += len(evict)
         return len(evict)
 
     def reset(self) -> None:

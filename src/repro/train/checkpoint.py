@@ -45,6 +45,20 @@ _STEP_RE = re.compile(r"step_(\d+)$")
 _JUNK_RE = re.compile(r"\.(?:tmp|old)-(\d+)-")
 _TRASH_COUNTER = itertools.count()
 
+# Sentinel file planted by repro.sketch.history's spill tier in every
+# directory it owns.  A directory containing it is NOT checkpoint
+# retention's to manage: `_retain` never prunes it (even if its name
+# happens to match `step_*`), `_sweep_stale` never garbage-collects it,
+# and `save` refuses to rename it aside — retired sketch history is
+# append-only state, not a replaceable checkpoint.
+HISTORY_MARKER = ".sketch-history"
+
+
+def _protected(path: str) -> bool:
+    """True for directories claimed by a history spill tier (see
+    ``HISTORY_MARKER``) — retention and sweeps must leave them alone."""
+    return os.path.isfile(os.path.join(path, HISTORY_MARKER))
+
 
 def _pid_alive(pid: int) -> bool:
     try:
@@ -72,6 +86,8 @@ def _sweep_stale(ckpt_dir: str) -> None:
             if (m := _JUNK_RE.match(d)) and not _pid_alive(int(m.group(1)))]
     for d in sorted(junk, key=lambda s: not s.startswith(".tmp")):
         path = os.path.join(ckpt_dir, d)
+        if _protected(path):           # a history tier is never debris
+            continue
         mpath = os.path.join(path, "manifest.json")
         if os.path.isfile(mpath):
             try:
@@ -138,6 +154,13 @@ def save(ckpt_dir: str, step: int, tree, *, data_state: Optional[Dict] = None,
     # ``latest_step``, and the next save's ``_sweep_stale`` promotes the
     # newest complete orphan back to its ``step_*`` name.
     if os.path.exists(final):
+        if _protected(final):
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise ValueError(
+                f"refusing to save step {int(step)}: {final!r} is a "
+                f"history spill directory (it contains {HISTORY_MARKER!r})"
+                " — renaming it aside would destroy retired sketch "
+                "history; save under a different checkpoint root or step")
         while True:
             trash = os.path.join(
                 ckpt_dir,
@@ -174,11 +197,15 @@ def _step_entries(ckpt_dir: str) -> List[Tuple[int, str]]:
     """``(step, dirname)`` for every well-formed ``step_<digits>`` entry,
     numerically sorted.  Stray entries (``step_final``, editor droppings,
     ``.tmp-*``/``.old-*`` save intermediates) are ignored rather than
-    crashing the parse."""
+    crashing the parse, and so are history spill directories (see
+    ``HISTORY_MARKER``) — they are not checkpoints, so ``_retain`` must
+    never rank-and-prune them and ``latest_step`` must never read one as
+    a restore candidate."""
     out = []
     for d in os.listdir(ckpt_dir):
         m = _STEP_RE.fullmatch(d)
-        if m and os.path.isdir(os.path.join(ckpt_dir, d)):
+        path = os.path.join(ckpt_dir, d)
+        if m and os.path.isdir(path) and not _protected(path):
             out.append((int(m.group(1)), d))
     return sorted(out)
 

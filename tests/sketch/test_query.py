@@ -208,6 +208,26 @@ def test_merge_streams_is_deprecated_query_cohort_all_alias():
     _assert_trees_equal(merged, _cohort_oracle(sk, state, S, [(0, S)], n))
 
 
+def test_merge_streams_warning_points_at_the_caller():
+    """stacklevel=2 pin: the DeprecationWarning must be attributed to the
+    CALLER's file (this test), not to api.py — otherwise `python -W
+    error::DeprecationWarning` tracebacks and log filters point users at
+    library internals instead of their own call site."""
+    import warnings
+
+    S, n, d = 3, 8, 4
+    sk = make_sketch("dsfd", d=d, eps=0.25, window=12)
+    fleet = vmap_streams(sk, S)
+    state = fleet.update_block(fleet.init(), jnp.asarray(_streams(S, n, d)),
+                               jnp.arange(1, n + 1, dtype=jnp.int32))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        merge_streams(fleet, state, n)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert dep[0].filename == __file__, dep[0].filename
+
+
 def test_query_cohort_sharded_fleet_matches_vmap():
     """shard_streams is a layout change; its query plane must answer
     identically to the vmap fleet's (whatever local device count)."""

@@ -171,6 +171,95 @@ def test_sweep_rescues_complete_orphans_after_crash(tmp_path):
                 if p.startswith(".tmp") or p.startswith(".old")]
 
 
+# ---------------------------------------------------------------------------
+# History spill dirs are sacrosanct: retention, sweeps, and re-saves must
+# never touch a directory carrying the HISTORY_MARKER — it holds the only
+# copy of retired sketch history.
+# ---------------------------------------------------------------------------
+
+
+def _mark(path):
+    os.makedirs(path, exist_ok=True)
+    open(os.path.join(path, ckpt.HISTORY_MARKER), "w").close()
+
+
+def test_retain_never_prunes_marked_history_dirs(tmp_path):
+    """A marked dir that HAPPENS to be named like a checkpoint step must
+    survive aggressive keep=1 retention and stay invisible to
+    latest_step/restore."""
+    d = str(tmp_path)
+    hist = os.path.join(d, "step_000000001")     # worst case: step-shaped
+    _mark(hist)
+    sentinel = os.path.join(hist, "leaf_000000.npy")
+    open(sentinel, "w").close()
+    for s in (10, 11, 12):
+        ckpt.save(d, s, _tree(), keep=1)         # retention runs each save
+    assert os.path.isfile(sentinel)              # never pruned
+    assert os.path.isfile(os.path.join(hist, ckpt.HISTORY_MARKER))
+    assert ckpt.latest_step(d) == 12             # never ranked as a step
+    steps = [s for s, _ in ckpt._step_entries(d)]
+    assert steps == [12]
+    ckpt._retain(d, 0)                           # even keep=0 spares it
+    assert os.path.isfile(sentinel)
+
+
+def test_save_refuses_to_displace_history_dir(tmp_path):
+    """save() renames an existing final dir aside before replacing it —
+    doing that to a spill dir would destroy retired history, so it must
+    refuse instead."""
+    d = str(tmp_path)
+    _mark(os.path.join(d, "step_000000002"))
+    with pytest.raises(ValueError, match="history spill directory"):
+        ckpt.save(d, 2, _tree())
+    # the marked dir is untouched and no debris was left behind
+    assert os.path.isfile(
+        os.path.join(d, "step_000000002", ckpt.HISTORY_MARKER))
+    assert not [p for p in os.listdir(d)
+                if p.startswith(".tmp") or p.startswith(".old")]
+    ckpt.save(d, 3, _tree())                     # other steps still work
+    assert ckpt.latest_step(d) == 3
+
+
+def test_sweep_skips_marked_junk_but_reclaims_unmarked(tmp_path):
+    import subprocess
+
+    d = str(tmp_path)
+    proc = subprocess.Popen(["sleep", "0"])
+    proc.wait()                                  # a guaranteed-dead pid
+    marked = os.path.join(d, f".old-{proc.pid}-1-0")
+    _mark(marked)
+    unmarked = os.path.join(d, f".tmp-{proc.pid}-2")
+    os.makedirs(unmarked)
+    ckpt.save(d, 1, _tree())                     # triggers the sweep
+    assert os.path.isdir(marked)                 # spared
+    assert not os.path.exists(unmarked)          # reclaimed as usual
+
+
+def test_realistic_spill_layout_survives_checkpointing(tmp_path):
+    """The actual on-disk shape the history plane produces: a spill root
+    under the checkpoint root, one marked node dir per cold node, each
+    holding a step_000000000 checkpoint.  Engine checkpoints with keep=1
+    beside it must leave every byte alone."""
+    d = str(tmp_path)
+    spill = os.path.join(d, "history")
+    _mark(spill)
+    for node in ("node_00_00000011", "node_01_00000003"):
+        nd = os.path.join(spill, node)
+        _mark(nd)
+        ckpt.save(nd, 0, {"per_stream": _tree()["w"]}, keep=1)
+    before = sorted(os.path.join(r, f)
+                    for r, _, fs in os.walk(spill) for f in fs)
+    for s in (1, 2, 3):
+        ckpt.save(d, s, _tree(), keep=1)
+    after = sorted(os.path.join(r, f)
+                   for r, _, fs in os.walk(spill) for f in fs)
+    assert before == after
+    got, _ = ckpt.restore(os.path.join(spill, "node_00_00000011"),
+                          {"per_stream": np.zeros((), np.float32)})
+    np.testing.assert_array_equal(np.asarray(got["per_stream"]),
+                                  np.arange(6.0).reshape(2, 3))
+
+
 def test_sketch_spec_section_round_trips(tmp_path):
     d = str(tmp_path)
     spec = {"sketch": {"name": "dsfd", "d": 8, "eps": 0.25, "window": 32,
