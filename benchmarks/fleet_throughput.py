@@ -26,7 +26,14 @@ SPMD fleet path layered on ``vmap_streams``) and reports, for fleet sizes
 * the persistent history plane (``history=True``): time-travel
   ``query_interval`` latency cold (first touch, faulting spilled nodes
   back from the cold tier) vs warm (hot LRU + memoized reductions),
-  plus the cold tier's on-disk footprint for the retired span.
+  plus the cold tier's on-disk footprint for the retired span, and
+* the scoring plane: the identical submission sequence drained with
+  ``score=False`` vs ``score=True`` (per-tick residual scoring against
+  the pre-update basis + the EWMA anomaly tracker; sketch state checked
+  bit-identical — scoring is read-only — before the overhead ratio is
+  reported), plus the adaptive-rank payoff — low-rank streams through a
+  fixed-rank ``fd`` fleet vs ``adapt_target=`` and the ``FleetSpace``
+  row totals each ends up holding.
 
 Besides the per-run CSV, writes machine-readable ``BENCH_fleet.json`` at
 the repo root so the perf trajectory is tracked across PRs; CI uploads it
@@ -369,6 +376,97 @@ def _bench_history(*, name: str, S: int, d: int, rows_per_user: int,
         shutil.rmtree(spill, ignore_errors=True)
 
 
+def _bench_score(*, name: str, S: int, d: int, rows_per_user: int,
+                 eps: float, window: int, block: int = 8,
+                 seed: int = 0, repeats: int = 2,
+                 adapt_target: float = 0.05) -> Dict:
+    """Scoring-plane cost and adaptive-rank payoff.
+
+    * ``score_overhead`` — the identical submission sequence drained
+      through ``score=False`` and ``score=True`` engines.  The scored
+      tick adds one jitted residual pass against the *pre-update* window
+      basis plus the host-side EWMA update; the sketch states are
+      checked bit-identical across the two runs (scoring must be
+      read-only on the sketch path) before the ratio is reported.
+      Throughput is best-of-``repeats`` as in ``_bench_ingest``.
+    * ``adapt_*`` — the space adaptive rank buys back: near-rank-2
+      streams through a fixed-rank ``fd`` fleet vs the same fleet with
+      ``adapt_target=`` (the per-stream shed-rate controller), reporting
+      both ``FleetSpace`` row totals, the savings fraction, and where
+      the controller left the per-stream ranks."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.engine import SketchFleetEngine
+    from repro.sketch.api import make_sketch, vmap_streams
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(S, rows_per_user, d)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+
+    out: Dict = {"score_repeats": repeats}
+    states = {}
+    for scored in (False, True):
+        walls = []
+        for _ in range(repeats):
+            eng = SketchFleetEngine(name, d=d, streams=S, eps=eps,
+                                    window=window, block=block,
+                                    score=scored)
+            for u in range(S):         # compile warmup outside the timer
+                eng.submit(u, X[u, 0])
+            eng.run()
+            jax.block_until_ready(eng.state)
+            for i in range(1, rows_per_user):
+                for u in range(S):
+                    eng.submit(u, X[u, i])
+            t0 = time.perf_counter()
+            eng.run(max_ticks=1_000_000)
+            jax.block_until_ready(eng.state)
+            walls.append(time.perf_counter() - t0)
+        key = "scored" if scored else "unscored"
+        n_timed = S * (rows_per_user - 1)
+        out[f"score_{key}_rows_per_sec"] = round(
+            n_timed / max(min(walls), 1e-9))
+        states[key] = [np.asarray(x) for x in jax.tree.leaves(eng.state)]
+        if scored:
+            out["score_flagged_streams"] = int(
+                np.asarray(eng.anomalies()).size)
+    for a, b in zip(states["unscored"], states["scored"]):
+        assert np.array_equal(a, b), \
+            "score=True perturbed the sketch state — scoring is read-only"
+    out["score_overhead"] = (out["score_unscored_rows_per_sec"]
+                             / max(out["score_scored_rows_per_sec"], 1))
+
+    # adaptive rank: near-rank-2 rows, fixed-ℓ fd vs adapt_target fd.
+    # Pinned to ε=1/8 (ℓ_max=8) with a long-enough run for the
+    # controller to settle — the payoff under test is the headroom
+    # adaptation buys back on easy streams, which a tiny ℓ_max (the
+    # sweep's throughput ε) would mask.
+    eps_a, n_a = min(eps, 1 / 8), max(rows_per_user, 160)
+    sk_f = make_sketch("fd", d=d, eps=eps_a, window=window)
+    sk_a = make_sketch("fd", d=d, eps=eps_a, window=window,
+                       adapt_target=adapt_target)
+    basis = np.linalg.qr(rng.normal(size=(d, 2)))[0].T.astype(np.float32)
+    low = (rng.normal(size=(S, n_a, 2)).astype(np.float32) @ basis
+           + 0.01 * rng.normal(size=(S, n_a, d)).astype(np.float32))
+    low /= np.linalg.norm(low, axis=2, keepdims=True)
+    ts = jnp.arange(1, n_a + 1, dtype=jnp.int32)
+    fixed, adapt = vmap_streams(sk_f, S), vmap_streams(sk_a, S)
+    sp_f = fixed.space(
+        fixed.update_block(fixed.init(), jnp.asarray(low), ts))
+    sp_a = adapt.space(
+        adapt.update_block(adapt.init(), jnp.asarray(low), ts))
+    ranks = np.asarray(sp_a.ranks)
+    out["adapt_target"] = adapt_target
+    out["adapt_ell_max"] = int(sk_f.meta["ell"])
+    out["adapt_fixed_space_rows"] = int(sp_f.total)
+    out["adapt_space_rows"] = int(sp_a.total)
+    out["adapt_space_savings"] = (
+        1.0 - int(sp_a.total) / max(int(sp_f.total), 1))
+    out["adapt_rank_mean"] = float(ranks.mean())
+    return out
+
+
 def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
           n: int = 192, eps: float = 0.25, window: int = 64,
           seed: int = 0, shard: bool = True) -> List[Dict]:
@@ -400,6 +498,9 @@ def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
                            window=window, seed=seed)
         his = _bench_history(name=name, S=S, d=d, rows_per_user=n,
                              eps=eps, window=window, seed=seed)
+        sco = _bench_score(name=name, S=S, d=d,
+                           rows_per_user=min(n, 64), eps=eps,
+                           window=window, seed=seed)
         print(f"fleet S={S:5d} on {jax.device_count()} device(s): "
               f"{rps:12,.0f} rows/s   (ingest {wall:.3f}s)")
         print(f"  engine ingest: sync "
@@ -432,11 +533,20 @@ def bench(sizes=(64, 256, 1024), *, name: str = "dsfd", d: int = 32,
                   f"query_interval cold {his['hist_cold_q_ms']:7.2f} ms "
                   f"({his['hist_cold_faults_per_query']:.1f} faults/query) "
                   f"→ warm {his['hist_warm_q_ms']:7.2f} ms (0 faults)")
+        print(f"  scoring plane: unscored "
+              f"{sco['score_unscored_rows_per_sec']:10,.0f} rows/s | "
+              f"scored {sco['score_scored_rows_per_sec']:10,.0f} rows/s "
+              f"({sco['score_overhead']:.2f}x, sketch state bit-identical, "
+              f"{sco['score_flagged_streams']} flagged); adaptive rank: "
+              f"{sco['adapt_space_rows']} vs "
+              f"{sco['adapt_fixed_space_rows']} fixed rows "
+              f"({sco['adapt_space_savings']:.0%} saved, mean ℓ "
+              f"{sco['adapt_rank_mean']:.1f} of {sco['adapt_ell_max']})")
         out.append({"fleet_size": S, "devices": jax.device_count(),
                     "rows_per_sec": round(rps), "ingest_wall_s": wall,
                     "rows_per_stream": n, "d": d, "eps": eps,
                     "window": window, "variant": name,
-                    **agg, **ing, **fus, **his})
+                    **agg, **ing, **fus, **his, **sco})
     if len(out) > 1:
         lo, hi = out[0], out[-1]
         ratio = (hi["krylov_fused_dispatch_ms"]

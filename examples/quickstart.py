@@ -160,6 +160,48 @@ print(f"fused krylov fleet ({kernel_lowering()} lowering): {S_k} streams × "
       f"{n_k} rows admitted in one submit_many, drained in {ticks_k} "
       f"single-launch ticks; query shape {eng_k.query_user(0).shape}")
 
+# --- Anomaly scoring: flag bad streams at ingest ---------------------------
+# score=True turns every tick into a detector: the incoming slab is scored
+# against the PRE-update window basis (a burst cannot vouch for itself) —
+# residual mass ‖x‖² − ‖x·Vᵀ‖² per row — and a per-stream EWMA flags users
+# whose tick peak exceeds mean + z·σ after warmup.  score_rows /
+# score_cohort answer on-demand probes against one user's basis or a
+# merged cohort basis served from the cached AggTree.
+S_a, n_a, bad_user = 16, 96, 5
+eng_a = SketchFleetEngine("dsfd", d=d, streams=S_a, eps=eps, window=N_s,
+                          block=8, score=True, score_zscore=4.0)
+rng_a = np.random.default_rng(7)
+axes = np.linalg.qr(rng_a.normal(size=(d, 2)))[0].T    # shared 2-dim habit
+for i in range(n_a):
+    coef = rng_a.normal(size=(S_a, 2)).astype(np.float32)
+    slab = coef @ axes + 0.03 * rng_a.normal(size=(S_a, d))
+    if i >= n_a - 6:                           # one user leaves the subspace
+        slab[bad_user] = 8.0 * rng_a.normal(size=(d,))
+    for u in range(S_a):
+        eng_a.submit(u, slab[u].astype(np.float32))
+    eng_a.step()
+flagged = eng_a.anomalies()
+assert bad_user in flagged
+probe = (3.0 * rng_a.normal(size=(4, d))).astype(np.float32)
+s_u = eng_a.score_rows(probe, user=0)          # vs user 0's window basis
+s_c = eng_a.score_cohort(probe, Cohort.range(0, 8))   # vs a merged cohort
+print(f"\nscoring plane: ingest flagged streams {flagged.tolist()} "
+      f"(injected: {bad_user}); off-subspace probes score "
+      f"{float(np.median(s_c)):.1f} vs in-window rows ≈ 0")
+
+# Adaptive rank: adapt_target= grows/shrinks each stream's ℓ online to
+# hold a target relative covariance error, so a heterogeneous fleet
+# spends rows only where streams are hard.  FleetSpace.ranks (and
+# eng.ranks() on a scoring engine) expose the per-stream ℓ.
+sk_ad = make_sketch("fd", d=d, eps=eps, window=N_s, adapt_target=0.05)
+fleet_ad = vmap_streams(sk_ad, 4)
+easy = streams[:4] @ axes.T @ axes             # 4 streams flattened to rank 2
+st_ad = fleet_ad.update_block(
+    fleet_ad.init(), jnp.asarray(easy, jnp.float32), ts)
+sp_ad = fleet_ad.space(st_ad)
+print(f"adaptive rank: rank-2 streams settle at ℓ={np.asarray(sp_ad.ranks)} "
+      f"(ℓ_max={sk_ad.meta['ell']}), {int(sp_ad.total)} rows total")
+
 # --- Time travel: the persistent history plane -----------------------------
 # history=True stops the window from *forgetting*: content that slides out
 # is retired into a time-dyadic index of compressed (2ℓ, d) snapshots —

@@ -391,6 +391,20 @@ def dsfd_query(cfg: DSFDConfig, state: DSFDState) -> jax.Array:
     return fd_compress(dsfd_query_rows(cfg, state), cfg.ell)
 
 
+def dsfd_score(cfg: DSFDConfig, state: DSFDState, X: jax.Array,
+               now=None) -> jax.Array:
+    """Residual anomaly score of each row of ``X`` against the windowed
+    sketch: energy outside the span of the live snapshot ∪ residual rows
+    (``‖x‖² − ‖x Vᵀ‖²``, clamped ≥ 0).  The FD guarantee bounds how much
+    in-window structure that span can miss, so a large score is a row the
+    current window genuinely cannot explain — the per-row event/anomaly
+    signal of the paper's motivating applications.  Pass ``now`` to
+    re-apply expiry first (same contract as ``dsfd_query_rows``)."""
+    from repro.sketch.basis import residual_scores
+
+    return residual_scores(dsfd_query_rows(cfg, state, now=now), X)
+
+
 def dsfd_merge(cfg: DSFDConfig, s1: DSFDState, s2: DSFDState,
                now=None) -> DSFDState:
     """Merge two DS-FD sketches into one (FD mergeability, Liberty 2013).

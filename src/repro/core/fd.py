@@ -130,3 +130,148 @@ def fd_query(state: FDState) -> jax.Array:
 def fd_merge(a: FDState, b: FDState, *, ell: int) -> FDState:
     """Merge two FD sketches (FD is mergeable: absorb b's rows into a)."""
     return fd_absorb(a, b.buf, ell=ell)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-rank FrequentDirections — grow/shrink ℓ toward a target residual
+# error (the btx FreqDir rank-adaption idea: the user names the relative
+# reconstruction error they can live with; the sketch adjusts its own rank
+# to meet it as data streams in).
+# ---------------------------------------------------------------------------
+
+
+class AdaptiveFDState(NamedTuple):
+    """FD state with an online working rank.
+
+    buf:    (2·ℓ_max, d) row buffer — physical capacity is the rank *cap*,
+            so states of every working rank share one static shape (jit /
+            vmap / shard_map friendly); only rows [0, nbuf) are live.
+    nbuf:   int32 — occupied rows.
+    shed:   f32 — cumulative Σ σ_ℓ² discarded by shrinks.  The FD bound
+            ``‖AᵀA − BᵀB‖₂ ≤ shed`` holds at every working rank.
+    ell:    int32 — current working rank ℓ ∈ [ℓ_min, ℓ_max] (traced; the
+            shrink indexes σ²_ℓ dynamically).
+    energy: f32 — cumulative ‖A‖_F² of everything absorbed.
+    shed_mark / energy_mark: f32 — ``shed``/``energy`` captured at the
+            last rank change.  ``(shed − shed_mark) / (energy −
+            energy_mark)`` is the relative error rate the CURRENT rank is
+            incurring — the controller's signal.  (The cumulative ratio
+            ``shed/energy`` is a stale signal: error already shed at a
+            too-small rank cannot be undone by growing, so steering on it
+            marches ℓ to ℓ_max long after the level stopped shedding.)
+    """
+
+    buf: jax.Array
+    nbuf: jax.Array
+    shed: jax.Array
+    ell: jax.Array
+    energy: jax.Array
+    shed_mark: jax.Array
+    energy_mark: jax.Array
+
+
+def adaptive_fd_init(ell_max: int, d: int, *, ell0: int | None = None,
+                     dtype=jnp.float32) -> AdaptiveFDState:
+    ell_max = int(min(ell_max, d))
+    ell0 = ell_max if ell0 is None else int(min(max(ell0, 1), ell_max))
+    return AdaptiveFDState(
+        buf=jnp.zeros((2 * ell_max, d), dtype),
+        nbuf=jnp.zeros((), jnp.int32),
+        shed=jnp.zeros((), dtype),
+        ell=jnp.asarray(ell0, jnp.int32),
+        energy=jnp.zeros((), dtype),
+        shed_mark=jnp.zeros((), dtype),
+        energy_mark=jnp.zeros((), dtype),
+    )
+
+
+def adaptive_fd_update(state: AdaptiveFDState, row: jax.Array, *,
+                       target: float, ell_min: int,
+                       ell_max: int) -> AdaptiveFDState:
+    """Absorb one row; at each shrink, re-aim ℓ at the error target.
+
+    Shrinks trigger at ``nbuf ≥ 2ℓ`` (the working rank's own cadence, not
+    the physical capacity — a small-ℓ state shrinks early and cheaply).
+    After the shrink the error rate incurred AT the current rank —
+    ``(shed − shed_mark) / (energy − energy_mark)``, i.e. since the last
+    rank change — is compared to ``target``: above it ℓ grows by one
+    (more directions kept, less shed per shrink); below half of it ℓ
+    shrinks by one — but only when the look-ahead agrees: the σ² of the
+    direction rank ℓ−1 would start discarding (``s2[ℓ−2]``, read off the
+    SVD the shrink already paid for) must itself be inside the half-
+    target budget.  Without the look-ahead the controller ping-pongs:
+    a level that sheds nothing invites a down-probe, the probe level
+    sheds a full σ²_{ℓ−1} before the rate signal reacts, and on
+    low-rank streams that single probe shrink can cost a large slice of
+    the window energy.  The half-target dead zone plus the per-level
+    measurement then keep ℓ hovering at the smallest rank that meets
+    the target instead of ratcheting on stale cumulative error.
+    All-zero rows are skipped (they change neither BᵀB nor the error).
+    """
+    is_zero = jnp.sum(row * row) <= 0.0
+    buf = jax.lax.dynamic_update_index_in_dim(state.buf, row, state.nbuf, 0)
+    nbuf = state.nbuf + 1
+    energy = state.energy + jnp.sum(row * row).astype(state.energy.dtype)
+
+    def do_shrink(args):
+        buf, nbuf, shed, ell, smark, emark = args
+        rows, s2n, delta = fd_shrink(buf, ell)
+        shed = shed + delta
+        span = jnp.maximum(energy - emark, 1e-30)
+        err = (shed - smark) / span
+        # what would rank ℓ−1 discard next time?  (pre-subtraction σ² at
+        # index ℓ−2; with ℓ at ℓ_min the clip below voids the read)
+        probe_cost = s2n[ell - 2] + delta
+        down_ok = (err < 0.5 * target) \
+            & (probe_cost <= 0.5 * target * span)
+        new_ell = jnp.clip(ell
+                           + (err > target).astype(jnp.int32)
+                           - down_ok.astype(jnp.int32),
+                           ell_min, ell_max)
+        changed = new_ell != ell
+        smark = jnp.where(changed, shed, smark)
+        emark = jnp.where(changed, energy, emark)
+        # occupancy = the rows the shrink actually left alive (sorted, so
+        # a prefix).  Deriving it from the NEW ell would, on a rank
+        # decrease, point the next insert AT a live row — silently
+        # deleting unaccounted energy and voiding the ≤-shed bound.
+        nlive = jnp.sum(s2n > 0.0).astype(jnp.int32)
+        return rows, nlive, shed, new_ell, smark, emark
+
+    def no_shrink(args):
+        return args
+
+    buf, nbuf, shed, ell, smark, emark = jax.lax.cond(
+        nbuf >= 2 * state.ell, do_shrink, no_shrink,
+        (buf, nbuf, state.shed, state.ell, state.shed_mark,
+         state.energy_mark))
+    st2 = AdaptiveFDState(buf, nbuf, shed, ell, energy, smark, emark)
+    return jax.tree.map(lambda a, b: jnp.where(is_zero, a, b), state, st2)
+
+
+def adaptive_fd_absorb(state: AdaptiveFDState, rows: jax.Array, *,
+                       target: float, ell_min: int,
+                       ell_max: int) -> AdaptiveFDState:
+    def step(st, r):
+        return adaptive_fd_update(st, r, target=target, ell_min=ell_min,
+                                  ell_max=ell_max), None
+
+    state, _ = jax.lax.scan(step, state, rows)
+    return state
+
+
+def adaptive_fd_merge(a: AdaptiveFDState, b: AdaptiveFDState, *,
+                      target: float, ell_min: int,
+                      ell_max: int) -> AdaptiveFDState:
+    """Merge by absorbing b's buffer rows, then restore the *stream*
+    accounting: energy/shed must cover both input streams, not count
+    b's (already-shed-reduced) buffer content as fresh energy."""
+    st = adaptive_fd_absorb(a, b.buf, target=target, ell_min=ell_min,
+                            ell_max=ell_max)
+    absorbed = jnp.sum(b.buf * b.buf).astype(st.energy.dtype)
+    energy = st.energy - absorbed + b.energy
+    shed = st.shed + b.shed
+    # a merge splices two error histories: restart the current-rank
+    # measurement window at the merged totals
+    return st._replace(energy=energy, shed=shed,
+                       shed_mark=shed, energy_mark=energy)

@@ -316,6 +316,7 @@ class FleetTopology:
         if transport is None:
             transport = MemTransport() if self.P == 1 else CoordTransport()
         self.transport = transport
+        self._ag_seq: Dict[str, int] = {}
 
     # -- ownership ----------------------------------------------------------
 
@@ -365,6 +366,28 @@ class FleetTopology:
             if p != self.pid:
                 self.transport.fetch(f"{self.namespace}/barrier/{name}/{p}",
                                      self.timeout_s)
+
+    def allgather_array(self, name: str, arr: np.ndarray
+                        ) -> List[np.ndarray]:
+        """Collective allgather of one small host array per process:
+        publish ours, fetch everyone's, return the ``P`` arrays in
+        process order (identical on every process).  Like every
+        transport collective, all processes must call it with the same
+        ``name`` sequence; an internal per-name counter scopes repeated
+        gathers so keys never collide (the engine's collective
+        ``anomalies()`` rides this)."""
+        seq = self._ag_seq.get(name, 0)
+        self._ag_seq[name] = seq + 1
+        buf = io.BytesIO()
+        np.save(buf, np.asarray(arr))
+        self.transport.publish(
+            f"{self.namespace}/ag/{name}/{seq}/{self.pid}", buf.getvalue())
+        out: List[np.ndarray] = []
+        for p in range(self.P):
+            data = self.transport.fetch(
+                f"{self.namespace}/ag/{name}/{seq}/{p}", self.timeout_s)
+            out.append(np.load(io.BytesIO(data), allow_pickle=False))
+        return out
 
     def spec(self) -> Dict[str, Any]:
         """JSON-serializable description for checkpoint manifests."""

@@ -224,6 +224,21 @@ class SketchFleetEngine:
         ``[t1, t2)``, answered in O(log(t2−t1)) merges from the
         persistent plane's tiered hot/cold dyadic index and carried
         through checkpoints (``repro.sketch.history``).
+      * ``score_rows(rows, user)`` / ``score_cohort(rows, users)`` —
+        residual anomaly scores of probe rows against one user's (or a
+        cohort's merged) current window basis, via the fleet's ``score``
+        capability.
+
+    Anomaly flagging (``score=True``): every ingested slab is residual-
+    scored against the pre-update window basis inside the ingesting tick
+    (one extra jitted program on the same device state — no second
+    transfer), and a per-user EWMA threshold
+    (``repro.sketch.score.ScorePlane``; ``score_ema`` / ``score_zscore``
+    / ``score_warmup``) flags users whose per-tick peak score spikes.
+    Harvest with ``eng.anomalies()`` (``collective=True`` under a
+    topology allgathers flagged GLOBAL ids on every process).  The
+    plane's accumulators ride engine checkpoints and restore
+    bit-identically, elastically across process counts.
     """
 
     def __init__(self, name: str = "dsfd", *, d: int, streams: int,
@@ -233,6 +248,8 @@ class SketchFleetEngine:
                  history: bool = False,
                  history_hot_nodes: Optional[int] = None,
                  history_dir: Optional[str] = None,
+                 score: bool = False, score_ema: float = 0.05,
+                 score_zscore: float = 4.0, score_warmup: int = 5,
                  **hyper):
         from repro.sketch.api import agg_tree, make_sketch, shard_streams
 
@@ -274,6 +291,28 @@ class SketchFleetEngine:
                 hot_capacity=history_hot_nodes, spill_dir=history_dir,
                 topology=topology)
             self.fleet = install_query_interval(self.fleet, self.history)
+        # the scoring plane: with score=True every ingested slab is
+        # residual-scored against the PRE-update window basis inside the
+        # ingesting tick (one extra jitted program, no second transfer),
+        # and per-user EWMA thresholds flag anomalous users online —
+        # harvest them with eng.anomalies()
+        self._wire_score(score, ema=score_ema, zscore=score_zscore,
+                         warmup=score_warmup)
+
+    def _wire_score(self, on: bool, *, ema: float, zscore: float,
+                    warmup: int) -> None:
+        """Build (or skip) the per-user EWMA scoring plane — also the
+        restore path, so the plane always wraps S_local streams."""
+        from repro.sketch import capability
+        from repro.sketch.score import ScorePlane
+
+        self.score_plane = None
+        if not on:
+            return
+        if not capability.has(self.fleet, "score"):
+            self.fleet.score()  # the capability raiser: names the fix
+        self.score_plane = ScorePlane(self.S_local, ema=ema,
+                                      zscore=zscore, warmup=warmup)
 
     def _wire_ingest(self, mode: str,
                      capacity: Optional[int]) -> None:
@@ -350,6 +389,16 @@ class SketchFleetEngine:
         if self.history is not None:
             hist_meta, hist_arrays = self.history.state_dict()
             aux.update(hist_arrays)
+        # the scoring plane's EWMA accumulators ride as aux leaves keyed
+        # by this process's GLOBAL stream range — a restore with a
+        # different process count reassembles its own slice from whatever
+        # ranges the save-time shards wrote (cf. the pending-id story)
+        score_meta = None
+        if self.score_plane is not None:
+            lo = 0 if self.topology is None else int(self.topology.lo)
+            for k, v in self.score_plane.state_dict().items():
+                aux[f"{k}_{lo:08d}_{lo + self.S_local:08d}"] = v
+            score_meta = self.score_plane.spec()
         # rows_ingested rides in the JSON spec (arbitrary-precision int —
         # an array leaf would be silently downcast by x64-disabled jax)
         return save_fleet(path, self.fleet, self.state, self.t, aux=aux,
@@ -359,7 +408,8 @@ class SketchFleetEngine:
                               "ingest": self.ingest,
                               "queue_capacity": self.queue.capacity,
                               "agg_tree": tree_meta,
-                              "history": hist_meta}},
+                              "history": hist_meta,
+                              "score": score_meta}},
                           keep=keep)
 
     @classmethod
@@ -448,6 +498,15 @@ class SketchFleetEngine:
             eng.history = HistoryPlane.from_state_dict(hmeta, fc.aux,
                                                        topology=topology)
             eng.fleet = install_query_interval(eng.fleet, eng.history)
+        smeta = espec.get("score")
+        eng._wire_score(smeta is not None, **(smeta or
+                                             dict(ema=0.0, zscore=0.0,
+                                                  warmup=0)))
+        if smeta is not None:
+            lo = 0 if topology is None else int(topology.lo)
+            arrays = _score_aux_slice(fc.aux, lo, lo + eng.S_local)
+            if arrays is not None:
+                eng.score_plane.load_state_dict(arrays)
         return eng
 
     # -- admission ---------------------------------------------------------
@@ -530,7 +589,7 @@ class SketchFleetEngine:
         time-based windows opt in to idle aging explicitly.
         """
         t_enter = time.perf_counter()
-        slab, touched, nrows = self.pipe.next_slab()
+        slab, touched, counts, nrows = self.pipe.next_slab()
         if nrows == 0 and not advance_time:
             self.last_dispatch_s = 0.0     # idle: nothing was dispatched
             return 0
@@ -539,6 +598,13 @@ class SketchFleetEngine:
                 self._zero_slab = np.zeros(
                     (self.S_local, self.block, self.d), np.float32)
             slab = self._zero_slab
+        dev_scores = None
+        if self.score_plane is not None and nrows:
+            # score the slab against the PRE-update window basis at the
+            # current clock: "is this row explained by what the window
+            # already holds?" — scoring post-update would let a burst
+            # vouch for itself
+            dev_scores = self.fleet.score(self.state, slab, self.t)
         ts = jnp.arange(self.t + 1, self.t + self.block + 1, dtype=jnp.int32)
         self.state = self.fleet.update_block(self.state, slab, ts)
         # admission-to-device latency of this tick (prefetched slabs make
@@ -547,6 +613,10 @@ class SketchFleetEngine:
         self.t += self.block
         self.rows_ingested += nrows
         self.tree.advance(self.state, touched)
+        if dev_scores is not None:
+            cnt = np.zeros((self.S_local,), np.int64)
+            cnt[touched] = counts
+            self.score_plane.observe(np.asarray(dev_scores), cnt)
         if self.history is not None:
             # the persistent plane is host-side: observe the slab's raw
             # units (one host copy — the opt-in cost of history), then
@@ -622,24 +692,123 @@ class SketchFleetEngine:
         for the whole fleet).  Needs ``history=True``; only intervals
         that have fully expired from the live window are addressable
         (``t2 − 1 <= t − window``) — live content is ``query_cohort``'s
-        job.  Collective under a topology, like ``query_cohort``."""
+        job.  Collective under a topology, like ``query_cohort``.
+
+        Without ``history=True`` the fleet's capability raiser fires —
+        its message explains how to build an engine that records history
+        (``repro.sketch.capability``)."""
         from repro.sketch.query import as_cohort
 
-        if self.history is None:
+        # delegation, not a hand-rolled guard: history-less fleets carry
+        # a context-derived raiser installed by the capability protocol
+        return self.fleet.query_interval(self.state, t1, t2,
+                                         as_cohort(users))
+
+    # -- the scoring plane ---------------------------------------------------
+
+    def score_rows(self, rows, user: Optional[int] = None) -> np.ndarray:
+        """Residual anomaly scores of ``rows`` (n, d) against one user's
+        current window basis (or the whole-fleet aggregate when ``user``
+        is None — equivalent to ``score_cohort(rows)``)."""
+        if user is None:
+            return self.score_cohort(rows)
+        u = self._route(user)
+        one = jax.tree.map(lambda x: x[u], self.state)
+        return np.asarray(self.base.score(one, jnp.asarray(
+            rows, jnp.float32), self.t))
+
+    def score_cohort(self, rows, users=None) -> np.ndarray:
+        """Residual anomaly scores of ``rows`` (n, d) against the merged
+        window basis of a cohort (``users`` as in :meth:`query_cohort`;
+        ``None`` = whole fleet) — the cached ``AggTree`` serves the
+        merged state, the base variant's ``score`` capability does the
+        residual."""
+        from repro.sketch.query import as_cohort
+
+        g = self.tree.query(self.state, as_cohort(users), self.t)
+        return np.asarray(self.base.score(g, jnp.asarray(
+            rows, jnp.float32), self.t))
+
+    def anomalies(self, *, reset: bool = False,
+                  collective: bool = False) -> np.ndarray:
+        """GLOBAL user ids currently flagged anomalous by the per-user
+        EWMA thresholds (``score=True`` engines; see
+        ``repro.sketch.score.ScorePlane``).  ``reset=True`` clears the
+        flags after reading.  Under a topology each process knows only
+        its owned streams; ``collective=True`` allgathers every process's
+        flagged ids into the same globally-sorted array on all processes
+        (a collective — call it from every process)."""
+        if self.score_plane is None:
             raise ValueError(
-                "this engine records no history — build it with "
-                "SketchFleetEngine(..., history=True[, history_hot_nodes="
-                "..., history_dir=...]) to retire expiring window "
-                "content into the time-travel index")
-        return self.history.query_interval(t1, t2, as_cohort(users))
+                "this engine scores nothing — build it with "
+                "SketchFleetEngine(..., score=True[, score_zscore=..., "
+                "score_warmup=...]) to run the per-user EWMA scoring "
+                "plane at ingest")
+        local = self.score_plane.anomalies(reset=reset)
+        if self.topology is not None:
+            local = local + np.int64(self.topology.lo)
+            if collective:
+                gathered = self.topology.allgather_array(
+                    "anomalies", np.asarray(local, np.int64))
+                local = np.sort(np.concatenate(gathered))
+        return np.asarray(local, np.int64)
+
+    def ranks(self) -> np.ndarray:
+        """Per-stream working rank ℓ of this process's streams (adaptive
+        variants only — ``make_sketch('fd', ..., adapt_target=...)``);
+        fires the capability raiser otherwise."""
+        return np.asarray(self.fleet.ranks(self.state))
 
     def space(self) -> Dict[str, int]:
         """Fleet-wide live-row accounting: per-stream total + cached
         ``AggTree`` node rows (see ``FleetSpace`` in ``sketch/api.py``)."""
         fs = self.fleet.space(self.state)
-        return {"per_stream_total": int(np.asarray(fs.per_stream).sum()),
-                "cache_rows": int(fs.cache_rows),
-                "total": int(fs.total)}
+        out = {"per_stream_total": int(np.asarray(fs.per_stream).sum()),
+               "cache_rows": int(fs.cache_rows),
+               "total": int(fs.total)}
+        if fs.ranks is not None:
+            out["ranks_total"] = int(np.asarray(fs.ranks).sum())
+        return out
+
+
+def _score_aux_slice(aux: Dict[str, np.ndarray], lo: int,
+                     hi: int) -> Optional[Dict[str, np.ndarray]]:
+    """Reassemble a restoring process's ``[lo, hi)`` slice of the scoring
+    plane's EWMA accumulators from checkpoint aux leaves keyed
+    ``score_*_{save_lo:08d}_{save_hi:08d}`` — the save-time process count
+    (and hence the key ranges) may differ from ours.  Streams no saved
+    range covers restart cold (count 0); returns ``None`` when no score
+    leaves exist at all (a pre-scoring checkpoint)."""
+    from repro.sketch.score import ScorePlane
+
+    out: Dict[str, np.ndarray] = {}
+    found = False
+    for base in ScorePlane.KEYS:
+        acc = None
+        for k, v in aux.items():
+            if not k.startswith(base + "_"):
+                continue
+            try:
+                klo, khi = (int(p) for p in k[len(base) + 1:].split("_"))
+            except ValueError:
+                continue
+            a, b = max(lo, klo), min(hi, khi)
+            if a >= b:
+                continue
+            v = np.asarray(v)
+            if acc is None:
+                acc = np.zeros((hi - lo,), v.dtype)
+            acc[a - lo:b - lo] = v[a - klo:b - klo]
+            found = True
+        if acc is not None:
+            out[base] = acc
+    if not found:
+        return None
+    # a key entirely outside every saved range still needs cold arrays
+    cold = ScorePlane(hi - lo).state_dict()
+    for base in ScorePlane.KEYS:
+        out.setdefault(base, cold[base])
+    return out
 
 
 def _splice_caches(cfg: ModelConfig, big, one, slot: int, s_max: int):

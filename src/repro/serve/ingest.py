@@ -423,13 +423,13 @@ class SyncIngest:
     def staged_snapshot(self) -> List[Tuple[int, List[np.ndarray]]]:
         return []
 
-    def next_slab(self) -> Tuple[Any, List[int], int]:
+    def next_slab(self) -> Tuple[Any, List[int], List[int], int]:
         q = self.queue
         if q.backlog == 0:            # idle tick: no slab, no allocation
-            return None, [], 0
+            return None, [], [], 0
         slab = np.zeros((q.S, self.block, q.d), np.float32)
-        touched, _, nrows = q.take_block(slab, self.block)
-        return slab, touched, nrows
+        touched, counts, nrows = q.take_block(slab, self.block)
+        return slab, touched, counts, nrows
 
     def after_dispatch(self, consumed: Any = None) -> None:
         pass
@@ -494,7 +494,7 @@ class AsyncIngest:
 
     # -- pipeline interface -------------------------------------------------
 
-    def next_slab(self) -> Tuple[Any, List[int], int]:
+    def next_slab(self) -> Tuple[Any, List[int], List[int], int]:
         """The slab for THIS tick: the staged one (topped up with any
         rows submitted since it was packed — the sync contract) or,
         cold, one assembled on the spot."""
@@ -502,9 +502,9 @@ class AsyncIngest:
             i = self._cur
             touched, counts, nrows = self._assemble(i)
             if nrows == 0:
-                return None, [], 0
+                return None, [], [], 0
             self._cur ^= 1
-            return self._prefetch(i), touched, nrows
+            return self._prefetch(i), touched, counts, nrows
         i, dev, touched, counts, nrows, seq = self._staged
         self._staged = None
         self.queue.reserved -= nrows
@@ -533,7 +533,7 @@ class AsyncIngest:
                 # discarded staging transfer was paid off the critical
                 # path inside the previous tick's compute shadow.
                 dev = np.array(self._bufs[i])
-        return dev, touched, nrows
+        return dev, touched, counts, nrows
 
     def after_dispatch(self, consumed: Any = None) -> None:
         """Stage the next slab while the device consumes the current one

@@ -81,13 +81,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.dsfd import (dsfd_init, dsfd_merge, dsfd_query_rows,
-                             dsfd_update, make_config)
-from repro.core.fd import fd_compress, fd_init, fd_merge, fd_update
+                             dsfd_score, dsfd_update, make_config)
+from repro.core.fd import (adaptive_fd_init, adaptive_fd_merge,
+                           adaptive_fd_update, fd_compress, fd_init,
+                           fd_merge, fd_update)
 from repro.core.seq_dsfd import (layered_init, layered_merge,
                                  layered_query_rows, layered_update,
                                  make_seq_config, make_time_config)
+from repro.sketch import capability
+from repro.sketch.basis import residual_scores
 from repro.sketch.query import ALL, AggTree, Cohort, as_cohort  # noqa: F401
 from repro.sketch.query import full_reduce_streams              # noqa: F401
+from repro.sketch.score import make_host_score, make_jax_score
 
 
 class SlidingSketch(NamedTuple):
@@ -110,9 +115,24 @@ class SlidingSketch(NamedTuple):
     plane of *retired* (expired-from-window) content
     (``repro.sketch.history``).  Live only on fleets with a history plane
     attached (``SketchFleetEngine(..., history=True)`` or
-    ``install_query_interval``); single sketches, host baselines, and
-    history-less fleets carry explanatory raisers — the same rollout
-    shape as ``query_cohort``.
+    ``install_query_interval``).
+
+    ``score(state, X, t=None)`` is the scoring plane: the residual
+    anomaly score of each row of ``X`` against the windowed sketch basis
+    (``repro.sketch.score``) — every registered variant carries it (JAX
+    variants as one jitted program, host baselines through the numpy
+    adapter), and fleets score whole ``(S, B, d)`` slabs in the same
+    fused/SPMD program shape as their updates.
+
+    ``ranks(state)`` reports the per-stream working rank — live only on
+    adaptive-rank variants (``make_sketch("fd", ..., adapt_target=...)``).
+
+    The optional fields (``query_cohort`` / ``query_interval`` / ``score``
+    / ``ranks``) are *capabilities* (``repro.sketch.capability``): when an
+    instance lacks one, the field holds a tagged raiser whose message is
+    derived from the instance's context (single vs fleet, host vs JAX,
+    history attached or not) — introspect with
+    ``repro.sketch.capability.capabilities(sk)``.
     """
 
     name: str
@@ -126,6 +146,8 @@ class SlidingSketch(NamedTuple):
     merge: Callable[..., Any]
     query_cohort: Optional[Callable[..., Any]] = None
     query_interval: Optional[Callable[..., Any]] = None
+    score: Optional[Callable[..., Any]] = None
+    ranks: Optional[Callable[..., Any]] = None
 
 
 class FleetSpace(NamedTuple):
@@ -133,11 +155,15 @@ class FleetSpace(NamedTuple):
     per-stream live-row counts (what the pre-query-plane fleet ``space``
     returned), ``cache_rows`` the rows held by the fleet's materialized
     ``AggTree`` nodes, and ``total`` the fleet-wide footprint
-    ``per_stream.sum() + cache_rows``."""
+    ``per_stream.sum() + cache_rows``.  ``ranks`` is the ``(S,)`` vector
+    of per-stream working ranks when the base sketch is adaptive-rank
+    (heterogeneous ℓ — the space the fleet *uses*, not a uniform bound),
+    else ``None``."""
 
     per_stream: Any
     total: Any
     cache_rows: int
+    ranks: Any = None
 
 
 _REGISTRY: Dict[str, Callable[..., SlidingSketch]] = {}
@@ -195,37 +221,20 @@ def make_sketch(name: str, *, d: int, eps: float = 1 / 8,
     if cached is not None:
         return _copy_meta(cached)
     sk = _REGISTRY[name](int(d), float(eps), int(window), **hyper)
-    if sk.query_cohort is None:
-
-        def _no_cohort(state, cohort=None, t=None, *, _name=name):
-            raise ValueError(
-                f"{_name!r} is a single sketch — cohort queries need a "
-                "fleet: lift it with vmap_streams/shard_streams, then call "
-                "query_cohort(state, cohort, t)")
-
-        sk = sk._replace(query_cohort=_no_cohort)
-    if sk.query_interval is None:
-        if sk.meta.get("backend") == "host":
-
-            def _no_interval(state, t1=None, t2=None, cohort=None, *,
-                             _name=name):
-                raise ValueError(
-                    f"{_name!r} is a host-side baseline — query_interval "
-                    "(time-travel over retired window content) is served "
-                    "by the JAX fleet path only: serve a JAX variant "
-                    "through SketchFleetEngine(..., history=True)")
+    if sk.score is None:
+        # every registered variant scores: JAX variants as one jitted
+        # residual program over their own query_rows, host baselines
+        # through the numpy SVD adapter
+        if sk.meta.get("backend") == "jax":
+            _qr = sk.query_rows
+            sk = sk._replace(score=make_jax_score(
+                lambda state, X, t: residual_scores(_qr(state, t), X)))
         else:
-
-            def _no_interval(state, t1=None, t2=None, cohort=None, *,
-                             _name=name):
-                raise ValueError(
-                    f"{_name!r} is a single sketch — time-travel interval "
-                    "queries need a fleet with a history plane: serve it "
-                    "through SketchFleetEngine(..., history=True), or lift "
-                    "it with vmap_streams and attach a plane via "
-                    "repro.sketch.history.install_query_interval")
-
-        sk = sk._replace(query_interval=_no_interval)
+            sk = sk._replace(score=make_host_score(sk.query_rows))
+    # fill every absent capability with a context-derived raiser (the
+    # hand-rolled per-site raisers this replaces lived here and in the
+    # fleet lifts; see repro.sketch.capability)
+    sk = capability.install_missing(sk)
     sk.meta["spec"] = {"name": name, "d": int(d), "eps": float(eps),
                        "window": int(window), "hyper": dict(hyper)}
     if key is not None:
@@ -255,15 +264,57 @@ def _block_scan(update: Callable) -> Callable:
 
 
 @register("fd")
-def _make_fd(d: int, eps: float, window: int, **_) -> SlidingSketch:
+def _make_fd(d: int, eps: float, window: int, *,
+             adapt_target: float | None = None, ell_min: int = 2,
+             ell0: int | None = None, **_) -> SlidingSketch:
     """Plain FrequentDirections (Ghashami et al. 2016) — the whole-stream
     primitive, no expiry.  ``window`` is ignored; registered so consumers can
-    opt out of sliding semantics without changing call sites."""
-    ell = int(min(max(round(1.0 / eps), 1), d))
+    opt out of sliding semantics without changing call sites.
 
-    def update(state, row, t):
-        del t
-        return fd_update(state, row, ell=ell)
+    ``adapt_target`` opts into **adaptive rank** (the btx ``FreqDir``
+    rank-adaption idea): instead of a fixed ℓ = 1/eps, the working rank
+    grows/shrinks online toward the named relative covariance error
+    (``shed / ‖A‖_F² → adapt_target``), bounded by ``[ell_min, 1/eps]``.
+    The buffer keeps the static ``(2·ℓ_max, d)`` shape (jit/vmap/shard_map
+    friendly); ``space`` reports the rows actually *occupied* and the
+    ``ranks`` capability reports the current ℓ — on easy streams both drop
+    well below the fixed-rank footprint.  ``ell0`` seeds the starting rank
+    (default ``ell_min``: start cheap, grow only when the error demands)."""
+    ell = int(min(max(round(1.0 / eps), 1), d))
+    if adapt_target is None:
+
+        def update(state, row, t):
+            del t
+            return fd_update(state, row, ell=ell)
+
+        def merge(s1, s2, t=None):
+            del t               # no expiry — whole-stream semantics
+            return fd_merge(s1, s2, ell=ell)
+
+        init = lambda t0=1: fd_init(ell, d)                  # noqa: E731
+        meta = {"d": d, "eps": eps, "window": window, "ell": ell,
+                "backend": "jax"}
+        ranks = None
+    else:
+        target = float(adapt_target)
+        lo = int(min(max(ell_min, 1), ell))
+        start = lo if ell0 is None else int(min(max(ell0, lo), ell))
+        kw = dict(target=target, ell_min=lo, ell_max=ell)
+
+        def update(state, row, t):
+            del t
+            return adaptive_fd_update(state, row, **kw)
+
+        def merge(s1, s2, t=None):
+            del t
+            return adaptive_fd_merge(s1, s2, **kw)
+
+        init = lambda t0=1: adaptive_fd_init(ell, d, ell0=start)  # noqa: E731
+        meta = {"d": d, "eps": eps, "window": window, "ell": ell,
+                "backend": "jax",
+                "adapt": {"target": target, "ell_min": lo,
+                          "ell_max": ell, "ell0": start}}
+        ranks = lambda state: state.ell                      # noqa: E731
 
     def query_rows(state, t=None):
         del t
@@ -272,21 +323,17 @@ def _make_fd(d: int, eps: float, window: int, **_) -> SlidingSketch:
     def space(state):
         return state.nbuf
 
-    def merge(s1, s2, t=None):
-        del t                   # no expiry — whole-stream semantics
-        return fd_merge(s1, s2, ell=ell)
-
     return SlidingSketch(
         name="fd",
-        meta={"d": d, "eps": eps, "window": window, "ell": ell,
-              "backend": "jax"},
-        init=lambda t0=1: fd_init(ell, d),
+        meta=meta,
+        init=init,
         update=update,
         update_block=_block_scan(update),
         query_rows=query_rows,
         query=query_rows,       # the FD buffer is already the 2ℓ×d sketch
         space=space,
         merge=merge,
+        ranks=ranks,
     )
 
 
@@ -322,6 +369,8 @@ def _make_dsfd(d: int, eps: float, window: int, *, mode: str = "fast",
         query=query,
         space=space,
         merge=lambda s1, s2, t=None: dsfd_merge(cfg, s1, s2, now=t),
+        score=make_jax_score(
+            lambda state, X, t: dsfd_score(cfg, state, X, now=t)),
     )
 
 
@@ -539,6 +588,39 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
             tree = agg_box["tree"] = AggTree(sk, S)
         return tree.query(state, cohort, t)
 
+    # the scoring plane lifts mechanically: the raw per-stream residual
+    # program rides on score._per_stream (see repro.sketch.score), so a
+    # whole (S, B, d) slab is scored in the same fused program shape as
+    # the block update — and the un-jitted vmapped programs are exposed
+    # for shard_streams to wrap in shard_map
+    raw = getattr(sk.score, "_per_stream", None)
+    v_ranks = jax.vmap(sk.ranks) if capability.has(sk, "ranks") else None
+    score = None
+    if raw is not None:
+        v_raw_t = jax.vmap(raw, in_axes=(0, 0, 0))
+        v_raw_nt = jax.vmap(lambda s, x: raw(s, x, None))
+        j_raw_t = jax.jit(v_raw_t)
+        j_raw_nt = jax.jit(v_raw_nt)
+
+        def score(state, rows, t=None):
+            rows = jnp.asarray(rows)
+            if t is None:
+                return j_raw_nt(state, rows)
+            ts = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (S,))
+            return j_raw_t(state, rows, ts)
+
+        score._vmapped_t = v_raw_t
+        score._vmapped_nt = v_raw_nt
+
+    ranks = None
+    if v_ranks is not None:
+        j_ranks = jax.jit(v_ranks)
+
+        def ranks(state):
+            return j_ranks(state)
+
+        ranks._vmapped = v_ranks
+
     v_space = jax.vmap(sk.space)
 
     def space(state):
@@ -547,19 +629,12 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
         cache_rows = 0 if tree is None else tree.space()
         return FleetSpace(per_stream=per,
                           total=jnp.sum(per) + cache_rows,
-                          cache_rows=cache_rows)
+                          cache_rows=cache_rows,
+                          ranks=None if ranks is None else ranks(state))
 
     fleet_name = f"vmap[{sk.name}x{S}]"
 
-    def _no_interval(state, t1=None, t2=None, cohort=None):
-        raise ValueError(
-            f"fleet {fleet_name!r} has no history plane — time-travel "
-            "interval queries need retired window content to be recorded: "
-            "serve the fleet through SketchFleetEngine(..., history=True) "
-            "or attach a plane with "
-            "repro.sketch.history.install_query_interval(fleet, plane)")
-
-    return SlidingSketch(
+    return capability.install_missing(SlidingSketch(
         name=fleet_name,
         meta=dict(sk.meta, streams=S, base=sk, agg_box=agg_box),
         init=init,
@@ -570,8 +645,9 @@ def vmap_streams(sk: SlidingSketch, streams: int) -> SlidingSketch:
         space=space,
         merge=merge,
         query_cohort=query_cohort,
-        query_interval=_no_interval,
-    )
+        score=score,
+        ranks=ranks,
+    ))
 
 
 def query_cohort(fleet: SlidingSketch, state, cohort=ALL, t=None):
@@ -589,7 +665,8 @@ def query_cohort(fleet: SlidingSketch, state, cohort=ALL, t=None):
     ``cohort`` composes via union: ``Cohort.range(0, 64) | Cohort.of(80)``.
     Pass :data:`ALL` (the default) for the whole-fleet aggregate.
     """
-    if fleet.query_cohort is None or fleet.meta.get("base") is None:
+    if (not capability.has(fleet, "query_cohort")
+            or fleet.meta.get("base") is None):
         raise ValueError(
             f"query_cohort needs a fleet from vmap_streams/shard_streams, "
             f"got {fleet.name!r}")
@@ -605,16 +682,15 @@ def query_interval(fleet: SlidingSketch, state, t1, t2, cohort=ALL):
 
     Needs a fleet with a plane attached (``SketchFleetEngine(...,
     history=True)`` or ``repro.sketch.history.install_query_interval``);
-    anything else raises with directions.  See ``repro.sketch.history``
-    for the canonical dyadic schedule the answer is pinned to.
+    anything else raises with receiver-correct directions (the capability
+    raiser — a fleet is told how to attach a plane, a single sketch how
+    to become a fleet first).  See ``repro.sketch.history`` for the
+    canonical dyadic schedule the answer is pinned to.
     """
-    if fleet.query_interval is None:
-        raise ValueError(
-            f"query_interval needs a fleet with a history plane, got "
-            f"{fleet.name!r} — serve it through SketchFleetEngine(..., "
-            "history=True) or attach a plane with "
-            "repro.sketch.history.install_query_interval")
-    return fleet.query_interval(state, t1, t2, cohort)
+    fn = fleet.query_interval
+    if fn is None:
+        fn = capability.missing("query_interval", fleet)
+    return fn(state, t1, t2, cohort)
 
 
 def agg_tree(fleet: SlidingSketch) -> AggTree:
@@ -747,7 +823,42 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
             rows = jax.device_put(np.asarray(rows), sharding)
         return shard_block(state, rows, ts)
 
-    return SlidingSketch(
+    # scoring as one shard_map'd SPMD program per slab — each device runs
+    # the local fleet's vmapped residual program on its own stream shard,
+    # same layout contract as update_block (bit-identity with the vmap
+    # and per-stream paths is pinned in tests/sketch/test_score.py)
+    score = None
+    if capability.has(local, "score"):
+        shard_sc_t = jax.jit(shard_map_compat(
+            local.score._vmapped_t, mesh=mesh,
+            in_specs=(spec, spec, spec), out_specs=spec, check_vma=False))
+        shard_sc_nt = jax.jit(shard_map_compat(
+            local.score._vmapped_nt, mesh=mesh,
+            in_specs=(spec, spec), out_specs=spec, check_vma=False))
+
+        def score(state, rows, t=None):
+            if not isinstance(rows, jax.Array):
+                rows = jax.device_put(np.asarray(rows), sharding)
+            if t is None:
+                return shard_sc_nt(state, rows)
+            ts = jnp.broadcast_to(jnp.asarray(t, jnp.int32), (S,))
+            return shard_sc_t(state, rows, ts)
+
+    ranks = None
+    if capability.has(local, "ranks"):
+        shard_ranks = jax.jit(shard_map_compat(
+            local.ranks._vmapped, mesh=mesh,
+            in_specs=(spec,), out_specs=spec, check_vma=False))
+
+        def ranks(state):
+            return shard_ranks(state)
+
+    def space(state):
+        fs = fleet.space(state)
+        return (fs if ranks is None
+                else fs._replace(ranks=ranks(state)))
+
+    return capability.install_missing(SlidingSketch(
         name=f"shard[{sk.name}x{S}/{ndev}]",
         meta=dict(sk.meta, streams=S, base=sk, mesh=mesh, devices=ndev,
                   axis=axis, slab_sharding=sharding,
@@ -757,11 +868,12 @@ def shard_streams(sk: SlidingSketch, streams: int, mesh=None, *,
         update_block=update_block,
         query_rows=fleet.query_rows,
         query=fleet.query,
-        space=fleet.space,
+        space=space,
         merge=fleet.merge,
         query_cohort=fleet.query_cohort,
-        query_interval=fleet.query_interval,
-    )
+        score=score,
+        ranks=ranks,
+    ))
 
 
 def _shard_streams_topology(sk: SlidingSketch, S: int, mesh, axis: str,
@@ -799,14 +911,18 @@ def _shard_streams_topology(sk: SlidingSketch, S: int, mesh, axis: str,
         return _tree().query(state, cohort, t)
 
     def space(state):
-        per = local.space(state).per_stream
+        ls = local.space(state)
         tree = box.get("tree")
         cache_rows = 0 if tree is None else tree.space()
-        return FleetSpace(per_stream=per,
-                          total=jnp.sum(per) + cache_rows,
-                          cache_rows=cache_rows)
+        return FleetSpace(per_stream=ls.per_stream,
+                          total=jnp.sum(ls.per_stream) + cache_rows,
+                          cache_rows=cache_rows,
+                          ranks=ls.ranks)
 
-    return SlidingSketch(
+    # score/ranks operate on LOCAL shapes, like update/query — forwarded
+    # from the local shard fleet (already shard_map'd over this process's
+    # devices); only query_cohort speaks global stream ids
+    return capability.install_missing(SlidingSketch(
         name=(f"topo[{sk.name}x{S}@{topology.pid}/{topology.P}"
               f":{topology.lo}-{topology.hi}]"),
         meta=dict(sk.meta, streams=S, base=sk, mesh=mesh,
@@ -824,8 +940,9 @@ def _shard_streams_topology(sk: SlidingSketch, S: int, mesh, axis: str,
         space=space,
         merge=local.merge,
         query_cohort=query_cohort,
-        query_interval=local.query_interval,
-    )
+        score=(local.score if capability.has(local, "score") else None),
+        ranks=(local.ranks if capability.has(local, "ranks") else None),
+    ))
 
 
 # ---------------------------------------------------------------------------
@@ -1007,11 +1124,20 @@ def restore_fleet(path: str, mesh=None, *, step: int | None = None,
         # for THIS manifest)
         tree, manifest = ckpt.restore(path, tree_like,
                                       step=int(manifest["step"]),
-                                      shardings=shardings)
+                                      shardings=shardings,
+                                      host_leaves=_is_aux_leaf)
         aux = {k: np.asarray(v) for k, v in tree["aux"].items()}
         return FleetCheckpoint(fleet, tree["state"], int(ss["t"]), aux,
                                manifest)
     return _restore_fleet_elastic(path, shards, mesh, step, topology)
+
+
+def _is_aux_leaf(path: str) -> bool:
+    """Manifest-path predicate for ``ckpt.restore(host_leaves=...)``: aux
+    arrays are host-side extras (pending queues, the engine's float64 EWMA
+    score accumulators) — they must come back at their on-disk dtype, not
+    through a jnp round-trip that downcasts f64/i64 when x64 is off."""
+    return path.startswith("['aux']")
 
 
 def _fleet_spec_of(manifest, path) -> Dict[str, Any]:
@@ -1086,7 +1212,8 @@ def _restore_fleet_elastic(path, shards, mesh, step, topology
         state_like = jax.eval_shape(lambda: src.init())
         aux_keys = list(ssi.get("aux_keys", []))
         tree_like = {"aux": {k: 0 for k in aux_keys}, "state": state_like}
-        tree, _ = ckpt.restore(sdir, tree_like, step=int(m["step"]))
+        tree, _ = ckpt.restore(sdir, tree_like, step=int(m["step"]),
+                               host_leaves=_is_aux_leaf)
         a, b = max(tlo, lo) - lo, min(thi, hi) - lo
         pieces.append(jax.tree.map(lambda x: np.asarray(x)[a:b],
                                    tree["state"]))

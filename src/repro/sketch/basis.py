@@ -32,3 +32,40 @@ def topr_basis(rows: jax.Array, r: int) -> Tuple[jax.Array, jax.Array]:
     # zero out directions with (numerically) no energy
     live = (lam > 1e-10).astype(jnp.float32)
     return lam * live, V * live[:, None]
+
+
+def project_rank_r(X: jax.Array, V: jax.Array
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Project rows of ``X`` onto the orthonormal basis ``V`` (r, d).
+
+    Returns ``(coef, low)``: the rank-r coefficients ``X Vᵀ`` (what crosses
+    the wire in compressed all-reduces) and the reconstruction ``coef V``.
+    """
+    coef = X @ V.T
+    return coef, coef @ V
+
+
+def residual_scores(rows: jax.Array, X: jax.Array) -> jax.Array:
+    """Residual anomaly score of each row of ``X`` against the row space
+    of the sketch stack ``rows``: ``‖x‖² − ‖x Vᵀ‖²`` clamped at zero.
+
+    ``V`` is the full orthonormal basis of the (k, d) sketch row space —
+    the FD covariance guarantee makes the energy *outside* that span a
+    principled per-row anomaly score (a row the window's top directions
+    cannot explain).  One jitted-friendly program: O(k²d + k³) for the
+    basis plus O(nkd) for the projections, k = sketch rows ≪ d rows.
+    """
+    k = rows.shape[0]
+    _, V = topr_basis(rows, k)
+    X = X.astype(jnp.float32)
+    coef = X @ V.T
+    tot = jnp.sum(X * X, axis=-1)
+    cap = jnp.sum(coef * coef, axis=-1)
+    return jnp.maximum(tot - cap, 0.0)
+
+
+def subspace_overlap(va: jax.Array, vb: jax.Array) -> jax.Array:
+    """``‖V_a V_bᵀ‖_F²`` for orthonormal (r, d) bases — r when the spans
+    coincide, 0 when orthogonal.  ``1 − overlap/r`` is the drift score."""
+    m = va @ vb.T
+    return jnp.sum(m * m)

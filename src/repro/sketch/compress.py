@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.core.dsfd import (DSFDConfig, dsfd_init, dsfd_update,
                              dsfd_query_rows, make_config)
 from repro.core.fd import fd_compress
-from repro.sketch.basis import topr_basis
+from repro.sketch.basis import project_rank_r, topr_basis
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,8 +79,7 @@ def _compress_leaf(cfg: CompressConfig, g: jax.Array, st: Dict
 
     rows = dsfd_query_rows(dcfg, st["dsfd"])
     lam, V = topr_basis(rows, cfg.rank)                 # (r,), (r, d)
-    coef = gi @ V.T                                     # (rows, r) — the wire
-    low = coef @ V                                      # rank-r reconstruction
+    coef, low = project_rank_r(gi, V)                   # coef is the wire
     err = gi - low
 
     # feed a row summary of the EF-corrected gradient into the sketch (this

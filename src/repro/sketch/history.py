@@ -710,11 +710,16 @@ def install_query_interval(fleet, plane: HistoryPlane):
     ``query_interval(state, t1, t2, cohort=ALL)`` (the ``state`` argument
     is accepted for protocol symmetry — retired history lives host-side
     in the plane, not in the device state) and ``meta['hist_box']``
-    carrying the plane for introspection."""
+    carrying the plane for introspection.
+
+    Goes through :func:`repro.sketch.capability.install` so the fleet's
+    capability context records the plane (``hist_box``) and any remaining
+    missing-capability raisers are re-derived for the new context."""
+    from repro.sketch import capability
 
     def query_interval(state, t1, t2, cohort=ALL):
         return plane.query_interval(t1, t2, cohort)
 
-    return fleet._replace(
-        meta=dict(fleet.meta, hist_box={"plane": plane}),
-        query_interval=query_interval)
+    return capability.install_missing(capability.install(
+        fleet, "query_interval", query_interval,
+        hist_box={"plane": plane}))

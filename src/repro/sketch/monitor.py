@@ -21,8 +21,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.sketch.api import SlidingSketch, make_sketch
-from repro.sketch.basis import topr_basis
+from repro.sketch.api import ALL, SlidingSketch, make_sketch, query_cohort
+from repro.sketch.basis import subspace_overlap, topr_basis
 
 _P1 = jnp.uint32(2654435761)          # Knuth multiplicative hashes
 _P2 = jnp.uint32(40503)
@@ -94,11 +94,31 @@ def sketch_query(cfg: SketchConfig, state: Dict, r: int = 8):
     return topr_basis(rows, r)
 
 
+def sketch_score(cfg: SketchConfig, state: Dict, rows,
+                 t=None) -> jax.Array:
+    """Residual anomaly score of probe rows against the windowed gradient
+    subspace — the protocol ``score`` capability on the monitor's own
+    sketch (a spiking score means the probe direction is not explained by
+    the recent window: drift/fault forensics on training dynamics)."""
+    return cfg.sketch().score(state["dsfd"], rows, t)
+
+
 def subspace_drift(cfg: SketchConfig, state_a: Dict, state_b: Dict,
                    r: int = 8) -> jax.Array:
     """1 − ‖V_a V_bᵀ‖_F²/r — 0 when the windowed top-r subspaces align,
-    → 1 when they rotate apart.  A cheap training-dynamics drift score."""
+    → 1 when they rotate apart.  A cheap training-dynamics drift score
+    (the shared ``repro.sketch.basis.subspace_overlap`` helper)."""
     _, va = sketch_query(cfg, state_a, r)
     _, vb = sketch_query(cfg, state_b, r)
-    m = va @ vb.T
-    return 1.0 - jnp.sum(m * m) / r
+    return 1.0 - subspace_overlap(va, vb) / r
+
+
+def cohort_sketch_query(cfg: SketchConfig, fleet, state, cohort=ALL,
+                        r: int = 8, t=None):
+    """Fleet form of :func:`sketch_query`: top-r directions of a *cohort*
+    of per-worker monitor sketches, aggregated through the query plane
+    (``query_cohort`` → ONE merged base-variant state served from the
+    fleet's cached AggTree) instead of a private per-call reduction."""
+    merged = query_cohort(fleet, state, cohort, t)
+    rows = fleet.meta["base"].query_rows(merged, t)
+    return topr_basis(rows, r)

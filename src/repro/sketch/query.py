@@ -49,6 +49,14 @@ rows") hits warm nodes — repeated queries are near-free, and different
 cohorts share every canonical node they have in common.  The cohort
 structure is also what a multi-host fleet shards along (each host owns
 a contiguous sub-tree; only the O(log S) top spine crosses hosts).
+
+The merged state a query returns is a full base-variant state, so every
+capability of the base sketch applies to it: ``base.query`` for the
+compressed window, ``base.query_rows`` + ``topr_basis`` for a cohort
+subspace, and ``base.score(merged, rows, t)`` for residual anomaly
+scores of probe rows against the cohort's merged window basis (the
+scoring plane, ``repro.sketch.score`` — served by
+``SketchFleetEngine.score_cohort``).
 """
 
 from __future__ import annotations

@@ -246,13 +246,20 @@ def read_manifest(ckpt_dir: str, *, step: Optional[int] = None) -> Dict:
 
 
 def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
-            shardings=None) -> Tuple[Any, Dict]:
+            shardings=None, host_leaves=None) -> Tuple[Any, Dict]:
     """Restore into the structure of ``tree_like``.
 
     ``shardings``: optional pytree of NamedShardings (matching tree_like)
     for the *current* mesh — leaves are device_put with them, which is the
     whole elastic-restart mechanism: the on-disk layout is mesh-agnostic
     (full arrays), so any target mesh works.
+
+    ``host_leaves``: optional predicate over manifest leaf paths (jax
+    keystr strings, e.g. ``"['aux']['score_mean']"``).  Matching leaves
+    stay numpy arrays at their on-disk dtype instead of going through
+    ``jnp.asarray`` — which, with x64 disabled, silently downcasts
+    float64/int64 host-side accumulators (exactly the arrays a caller
+    saved as host extras because they must restore bit-identically).
     """
     manifest = read_manifest(ckpt_dir, step=step)
     path = os.path.join(ckpt_dir, f"step_{manifest['step']:09d}")
@@ -268,6 +275,8 @@ def restore(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
         arr = _np_restore(arr, manifest["dtypes"][i])
         if flat_sh[i] is not None:
             leaves.append(jax.device_put(arr, flat_sh[i]))
+        elif host_leaves is not None and host_leaves(manifest["paths"][i]):
+            leaves.append(arr)
         else:
             leaves.append(jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest

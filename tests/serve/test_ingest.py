@@ -396,8 +396,9 @@ def test_topped_up_slab_does_not_pay_a_second_transfer():
     assert eng.pipe.staged_rows == 2 * S
     for u in range(S):                           # stale-stage the slab
         eng.submit(u, X[u, BLOCK + 2])
-    slab, touched, nrows = eng.pipe.next_slab()  # top-up fires
+    slab, touched, counts, nrows = eng.pipe.next_slab()  # top-up fires
     assert nrows == 3 * S and touched == list(range(S))
+    assert counts == [3] * S
     assert isinstance(slab, np.ndarray), \
         "topped-up slab should be a host copy, not a re-prefetched array"
     # it is a *private* copy: repacking the pipeline buffer later must

@@ -285,3 +285,142 @@ def test_fleet_space_bounds_per_stream_and_total():
     assert 0 < sp2.cache_rows <= (S - 1) * 2 * sk.meta["ell"]
     assert int(sp2.total) == int(np.asarray(sp2.per_stream).sum()) \
         + sp2.cache_rows
+
+
+# ---------------------------------------------------------------------------
+# the score capability — registry-wide (ISSUE: the scoring plane)
+# ---------------------------------------------------------------------------
+
+
+N_SCORE = 90                                   # shorter stream: score only
+
+
+def _scored_state(sk, seed=21):
+    A = _stream(n=N_SCORE, seed=seed)
+    ts = np.arange(1, N_SCORE + 1, dtype=np.int32)
+    rows = jnp.asarray(A) if sk.meta["backend"] == "jax" else A
+    tsx = jnp.asarray(ts) if sk.meta["backend"] == "jax" else ts
+    return sk.update_block(sk.init(), rows, tsx), A
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_score_shapes_dtypes_and_nonnegative(name):
+    """Every registered variant carries a live ``score`` capability:
+    (n, d) probes → (n,) float32 residuals, all ≥ 0."""
+    sk = _make(name)
+    state, _ = _scored_state(sk)
+    X = _stream(n=7, seed=22) * 2.0
+    out = np.asarray(sk.score(state, X, N_SCORE))
+    assert out.shape == (7,) and out.dtype == np.float32
+    assert np.all(out >= 0.0), f"{name}: negative residual"
+    # the t=None (timeless) path must either score or refuse with the
+    # variant's documented explicit-time requirement — never misbehave
+    try:
+        out_nt = np.asarray(sk.score(state, X))
+    except ValueError as e:
+        assert "query time" in str(e)
+    else:
+        assert out_nt.shape == (7,) and np.all(out_nt >= 0.0)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_score_in_basis_row_is_zero(name):
+    """A probe lying inside the span of the sketch's own live rows has
+    (near-)zero residual; a probe orthogonal to it scores ≈ ‖x‖²."""
+    sk = _make(name)
+    state, _ = _scored_state(sk)
+    rows = np.asarray(sk.query_rows(state, N_SCORE), np.float64)
+    live = rows[np.linalg.norm(rows, axis=1) > 0]
+    assert live.size, f"{name}: empty sketch after {N_SCORE} rows"
+    probe_in = (live[0] / np.linalg.norm(live[0])).astype(np.float32)
+    # build an orthogonal probe via QR against the live row space
+    q, _ = np.linalg.qr(np.asarray(live).T, mode="complete")
+    probe_out = q[:, -1].astype(np.float32)     # ⟂ span(live) when rank < d
+    rank = np.linalg.matrix_rank(live)
+    X = np.stack([probe_in, probe_out])
+    out = np.asarray(sk.score(state, X, N_SCORE))
+    assert out[0] <= 1e-4, f"{name}: in-basis residual {out[0]}"
+    if rank < D:
+        assert out[1] >= 0.9, \
+            f"{name}: orthogonal probe scored {out[1]}, expected ≈ 1"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_fleet_score_matches_sequential(name):
+    """vmap-lifted fleet scoring ≡ per-stream loop, bit for bit (JAX
+    variants; host baselines have no fleet lift)."""
+    from repro.sketch.api import vmap_streams
+
+    sk = _make(name)
+    if sk.meta["backend"] != "jax":
+        pytest.skip("host baseline: no fleet lift")
+    S, n = 3, N_SCORE
+    fleet = vmap_streams(sk, S)
+    rng = np.random.default_rng(23)
+    X = rng.normal(size=(S, n, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
+    probes = rng.normal(size=(S, 5, D)).astype(np.float32)
+    got = np.asarray(fleet.score(state, jnp.asarray(probes), n))
+    assert got.shape == (S, 5) and got.dtype == np.float32
+    for s in range(S):
+        one = jax.tree.map(lambda x: x[s], state)
+        want = np.asarray(sk.score(one, jnp.asarray(probes[s]), n))
+        assert np.array_equal(got[s], want), \
+            f"{name} stream {s}: fleet score ≠ sequential"
+
+
+# ---------------------------------------------------------------------------
+# capability introspection — every variant × {single, fleet}
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_capability_introspection_single(name):
+    """``capabilities(sk)`` covers every declared optional field with the
+    right availability for a bare single sketch — and each unavailable
+    capability's raiser fires with exactly the introspected reason."""
+    from repro.sketch.capability import OPTIONAL_FIELDS, capabilities
+
+    sk = _make(name)
+    caps = capabilities(sk)
+    assert set(caps) == set(OPTIONAL_FIELDS)
+    assert caps["score"].available, f"{name}: score must be universal"
+    assert not caps["query_cohort"].available
+    assert not caps["query_interval"].available
+    assert not caps["ranks"].available          # fixed-rank registry builds
+    for cap, info in caps.items():
+        if info.available:
+            continue
+        assert info.reason, f"{name}.{cap}: missing reason text"
+        with pytest.raises(ValueError) as ei:
+            getattr(sk, cap)()
+        assert str(ei.value) == info.reason
+    # single-sketch guidance: lift/serve, never a fleet-only installer
+    assert "vmap_streams" in caps["query_cohort"].reason
+    if sk.meta["backend"] == "host":
+        assert "host-side baseline" in caps["query_interval"].reason
+    else:
+        assert "single sketch" in caps["query_interval"].reason
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_capability_introspection_fleet(name):
+    """Lifting regenerates the capability surface for the new context:
+    ``query_cohort``/``score`` go live, ``query_interval``'s raiser now
+    speaks to a *fleet* holder (attach a plane / serve with history)."""
+    from repro.sketch.api import vmap_streams
+    from repro.sketch.capability import capabilities
+
+    sk = _make(name)
+    if sk.meta["backend"] != "jax":
+        pytest.skip("host baseline: no fleet lift")
+    fleet = vmap_streams(sk, 3)
+    caps = capabilities(fleet)
+    assert caps["query_cohort"].available
+    assert caps["score"].available
+    assert not caps["query_interval"].available
+    assert "history plane" in caps["query_interval"].reason
+    assert "install_query_interval(fleet, plane)" \
+        in caps["query_interval"].reason

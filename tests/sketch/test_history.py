@@ -381,7 +381,11 @@ def test_explanatory_raisers():
         query_interval(fleet, None, 1, 2)
     eng = SketchFleetEngine("dsfd", d=D, streams=S, eps=EPS, window=W,
                             block=BLOCK)                  # history off
-    with pytest.raises(ValueError, match="records no history"):
+    # the engine delegates to the fleet's capability raiser — the message
+    # must name the constructor the engine caller can actually use
+    with pytest.raises(ValueError, match="no history plane"):
+        eng.query_interval(None, 1, 2)
+    with pytest.raises(ValueError, match="history=True"):
         eng.query_interval(None, 1, 2)
     with pytest.raises(ValueError, match="hot capacity"):
         SketchFleetEngine("dsfd", d=D, streams=S, eps=EPS, window=W,

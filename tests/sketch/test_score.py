@@ -1,0 +1,304 @@
+"""The scoring plane (ISSUE: residual anomaly scores + per-stream
+adaptive rank), pinned against an independent numpy oracle:
+
+* ``score`` ≡ the float64 numpy residual against the sketch's own live
+  row space — for JAX variants and host baselines alike;
+* fleet scoring is bit-identical across all three execution paths
+  (vmap ≡ shard_map ≡ per-stream loop);
+* adaptive-rank FD holds the target residual error while
+  ``FleetSpace.total`` drops measurably below the fixed-rank fleet on
+  easy (low-rank) streams — the btx-style rank adaption;
+* the serving engine's per-user EWMA plane flags score spikes at ingest
+  and restores bit-identically from checkpoints;
+* capability raiser text names a constructor the *caller's object* can
+  actually be fed to (the PR-8 receiver bug, pinned).
+"""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sketch.api import make_sketch, shard_streams, vmap_streams
+from repro.sketch.capability import capabilities
+from repro.sketch.score import ScorePlane, host_residual_scores
+
+D, WINDOW, EPS = 16, 96, 1 / 8
+N = 120
+
+
+def _stream(n=N, d=D, seed=0, rank=None):
+    rng = np.random.default_rng(seed)
+    if rank is None:
+        A = rng.normal(size=(n, d)).astype(np.float32)
+    else:
+        A = (rng.normal(size=(n, rank)).astype(np.float32)
+             @ rng.normal(size=(rank, d)).astype(np.float32))
+    A /= np.linalg.norm(A, axis=1, keepdims=True)
+    return A
+
+
+def _oracle(rows, X):
+    """Independent float64 residual: energy of each probe outside the
+    row space of the live sketch rows (numpy SVD, no repro code)."""
+    rows = np.asarray(rows, np.float64)
+    X = np.asarray(X, np.float64)
+    tot = np.sum(X * X, axis=-1)
+    live = rows[np.linalg.norm(rows, axis=1) > 0]
+    if live.size == 0:
+        return tot
+    _, s, vt = np.linalg.svd(live, full_matrices=False)
+    V = vt[s > 1e-9 * max(float(s[0]), 1e-30)]
+    coef = X @ V.T
+    return np.maximum(tot - np.sum(coef * coef, axis=-1), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the oracle pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["dsfd", "fd", "lmfd", "swor"])
+def test_score_matches_numpy_oracle(name):
+    sk = make_sketch(name, d=D, eps=EPS, window=WINDOW)
+    A = _stream(seed=3)
+    ts = np.arange(1, N + 1, dtype=np.int32)
+    rows_in = jnp.asarray(A) if sk.meta["backend"] == "jax" else A
+    tsx = jnp.asarray(ts) if sk.meta["backend"] == "jax" else ts
+    state = sk.update_block(sk.init(), rows_in, tsx)
+    X = _stream(n=9, seed=4) * 1.7
+    got = np.asarray(sk.score(state, X, N), np.float64)
+    want = _oracle(sk.query_rows(state, N), X)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3,
+                               err_msg=f"{name}: score ≠ numpy oracle")
+
+
+def test_host_residual_scores_edge_cases():
+    # empty sketch: everything is residual
+    X = _stream(n=4, seed=5) * 2.0
+    out = host_residual_scores(np.zeros((6, D), np.float32), X)
+    np.testing.assert_allclose(out, np.sum(X * X, axis=-1), rtol=1e-5)
+    # full-rank row space: nothing is
+    out2 = host_residual_scores(np.eye(D, dtype=np.float32), X)
+    np.testing.assert_allclose(out2, 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tri-path bit-identity: vmap ≡ shard_map ≡ per-stream loop
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_score_tri_path_bit_identical():
+    S, n = 4, N
+    sk = make_sketch("dsfd", d=D, eps=EPS, window=WINDOW)
+    vfleet = vmap_streams(sk, S)
+    sfleet = shard_streams(sk, S)
+    rng = np.random.default_rng(7)
+    X = rng.normal(size=(S, n, D)).astype(np.float32)
+    X /= np.linalg.norm(X, axis=2, keepdims=True)
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    vstate = vfleet.update_block(vfleet.init(), jnp.asarray(X), ts)
+    sstate = sfleet.update_block(sfleet.init(), jnp.asarray(X), ts)
+    probes = rng.normal(size=(S, 6, D)).astype(np.float32)
+
+    v = np.asarray(vfleet.score(vstate, jnp.asarray(probes), n))
+    s = np.asarray(sfleet.score(sstate, probes, n))     # host slab branch
+    loop = np.stack([
+        np.asarray(sk.score(jax.tree.map(lambda x: x[i], vstate),
+                            jnp.asarray(probes[i]), n))
+        for i in range(S)])
+    assert np.array_equal(v, loop), "vmap ≠ per-stream loop"
+    assert np.array_equal(s, loop), "shard_map ≠ per-stream loop"
+    # and against the oracle (loose: f32 Gram basis vs f64 SVD)
+    for i in range(S):
+        want = _oracle(sk.query_rows(
+            jax.tree.map(lambda x: x[i], vstate), n), probes[i])
+        np.testing.assert_allclose(v[i].astype(np.float64), want,
+                                   atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# per-stream adaptive rank
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_rank_holds_target_and_saves_space():
+    """On easy (rank-2) streams the adaptive fleet settles well below
+    ell_max — FleetSpace.total drops measurably vs the fixed-rank fleet —
+    while the windowed covariance error stays within the FD bound."""
+    S, n = 4, 240
+    fixed = make_sketch("fd", d=D, eps=EPS, window=WINDOW)
+    adapt = make_sketch("fd", d=D, eps=EPS, window=WINDOW,
+                        adapt_target=0.05)
+    assert capabilities(adapt)["ranks"].available
+    ffleet, afleet = vmap_streams(fixed, S), vmap_streams(adapt, S)
+    X = np.stack([_stream(n=n, seed=10 + i, rank=2) for i in range(S)])
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    fstate = ffleet.update_block(ffleet.init(), jnp.asarray(X), ts)
+    astate = afleet.update_block(afleet.init(), jnp.asarray(X), ts)
+
+    ell_max = adapt.meta["adapt"]["ell_max"]
+    ranks = np.asarray(afleet.ranks(astate))
+    assert ranks.shape == (S,)
+    assert np.all(ranks < ell_max), \
+        f"easy streams should shrink ell below {ell_max}, got {ranks}"
+
+    fsp, asp = ffleet.space(fstate), afleet.space(astate)
+    assert asp.ranks is not None and np.array_equal(
+        np.asarray(asp.ranks), ranks)
+    assert int(asp.total) < int(fsp.total), \
+        f"adaptive total {int(asp.total)} !< fixed {int(fsp.total)}"
+
+    # the error target holds: per-stream relative covariance error of the
+    # adaptive sketch stays within the (generous) FD window bound
+    for i in range(S):
+        B = np.asarray(adapt.query_rows(
+            jax.tree.map(lambda x: x[i], astate), n), np.float64)
+        AW = X[i].astype(np.float64)            # fd: whole-stream window
+        err = np.linalg.norm(AW.T @ AW - B.T @ B, 2) / np.sum(AW * AW)
+        assert err <= 0.05 + EPS, f"stream {i}: rel err {err:.4f}"
+
+
+def test_adaptive_rank_rides_checkpoints():
+    from repro.sketch.api import restore_fleet, save_fleet
+
+    S, n = 3, 80
+    adapt = make_sketch("fd", d=D, eps=EPS, window=WINDOW,
+                        adapt_target=0.05)
+    fleet = vmap_streams(adapt, S)
+    X = np.stack([_stream(n=n, seed=20 + i, rank=2) for i in range(S)])
+    ts = jnp.arange(1, n + 1, dtype=jnp.int32)
+    state = fleet.update_block(fleet.init(), jnp.asarray(X), ts)
+    probes = jnp.asarray(_stream(n=5, seed=29))
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        save_fleet(os.path.join(td, "ck"), fleet, state, n)
+        fc = restore_fleet(os.path.join(td, "ck"))
+        assert np.array_equal(np.asarray(fleet.ranks(state)),
+                              np.asarray(fc.fleet.ranks(fc.state)))
+        assert np.array_equal(
+            np.asarray(fleet.score(state, probes[None].repeat(S, 0), n)),
+            np.asarray(fc.fleet.score(fc.state,
+                                      probes[None].repeat(S, 0), n))), \
+            "restored fleet must score bit-identically"
+
+
+# ---------------------------------------------------------------------------
+# the serving engine's EWMA plane
+# ---------------------------------------------------------------------------
+
+
+def _spiked_engine(**kw):
+    from repro.serve.engine import SketchFleetEngine
+
+    S, block = 6, 4
+    eng = SketchFleetEngine("dsfd", d=D, streams=S, eps=1 / 4,
+                            window=WINDOW, block=block, score=True,
+                            score_warmup=3, score_zscore=3.0, **kw)
+    rng = np.random.default_rng(31)
+    dirs = rng.standard_normal((2, D)).astype(np.float32)
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    for _ in range(10):                     # warm, in-subspace traffic
+        for u in range(S):
+            c = rng.standard_normal(2).astype(np.float32)
+            eng.submit(u, c @ dirs)
+        eng.step()
+    return eng, rng, dirs
+
+
+def test_engine_flags_anomalous_user_at_ingest():
+    eng, rng, dirs = _spiked_engine()
+    assert eng.anomalies().size == 0, "no spike yet"
+    spike = rng.standard_normal(D).astype(np.float32) * 10
+    for u in range(eng.S):
+        c = rng.standard_normal(2).astype(np.float32)
+        eng.submit(u, spike if u == 2 else c @ dirs)
+    eng.step()
+    flagged = eng.anomalies(reset=True)
+    assert 2 in flagged, f"spiking user not flagged: {flagged}"
+    assert eng.anomalies().size == 0, "reset=True must clear the flags"
+
+
+def test_engine_score_plane_checkpoint_bit_identical(tmp_path):
+    from repro.serve.engine import SketchFleetEngine
+
+    eng, rng, dirs = _spiked_engine()
+    eng.checkpoint(str(tmp_path / "ck"))
+    eng2 = SketchFleetEngine.from_checkpoint(str(tmp_path / "ck"))
+    for k in ("mean", "var", "count", "flagged", "last"):
+        a = getattr(eng.score_plane, k)
+        b = getattr(eng2.score_plane, k)
+        assert a.dtype == b.dtype and np.array_equal(a, b), k
+    # and it KEEPS scoring identically tick for tick
+    for _ in range(3):
+        for u in range(eng.S):
+            c = rng.standard_normal(2).astype(np.float32)
+            row = c @ dirs
+            eng.submit(u, row)
+            eng2.submit(u, row)
+        eng.step()
+        eng2.step()
+    assert np.array_equal(eng.score_plane.mean, eng2.score_plane.mean)
+    assert np.array_equal(eng.score_plane.var, eng2.score_plane.var)
+
+
+def test_engine_cohort_and_user_scores():
+    eng, rng, dirs = _spiked_engine()
+    novel = np.linalg.qr(np.vstack([dirs, rng.standard_normal(
+        (D - 2, D)).astype(np.float32)]).T)[0][:, -1].astype(np.float32)
+    probes = np.stack([dirs[0], novel])
+    sc = eng.score_cohort(probes)
+    assert sc.shape == (2,) and sc[0] <= 1e-3 and sc[1] >= 0.5
+    sc_u = eng.score_rows(probes, user=1)
+    assert sc_u.shape == (2,) and sc_u[0] <= 1e-3
+
+
+def test_score_plane_unit_behaviors():
+    pl = ScorePlane(4, ema=0.5, zscore=2.0, warmup=2)
+    flat = np.full((4, 3), 1.0)
+    cnt = np.array([3, 3, 3, 0])
+    for _ in range(4):
+        assert pl.observe(flat, cnt).size == 0   # constant: never flags
+    assert pl.count[3] == 0, "zero-count streams must not accumulate"
+    spike = flat.copy()
+    spike[1] = 50.0
+    newly = pl.observe(spike, cnt)
+    assert list(newly) == [1]
+    assert list(pl.anomalies()) == [1]
+    # partition mismatch refuses loudly
+    other = ScorePlane(5)
+    with pytest.raises(ValueError, match="same stream partition"):
+        other.load_state_dict(pl.state_dict())
+
+
+# ---------------------------------------------------------------------------
+# receiver-correct raiser text (satellite: the PR-8 message bug)
+# ---------------------------------------------------------------------------
+
+
+def test_missing_capability_messages_name_usable_constructors():
+    """A single sketch's query_interval guidance must NOT tell the caller
+    to run ``install_query_interval(fleet, plane)`` as if they held a
+    fleet — it must say how to GET one first (the PR-8 bug, pinned)."""
+    single = make_sketch("dsfd", d=D, eps=EPS, window=WINDOW)
+    reason = capabilities(single)["query_interval"].reason
+    assert "single sketch" in reason
+    assert "vmap_streams" in reason          # how to become a fleet…
+    assert "SketchFleetEngine" in reason     # …or be served with history
+    # the installer is only suggested AFTER the lift it needs
+    assert reason.index("vmap_streams") \
+        < reason.index("install_query_interval")
+
+    host = make_sketch("lmfd", d=D, eps=EPS, window=WINDOW)
+    hreason = capabilities(host)["query_interval"].reason
+    assert "host-side baseline" in hreason
+    assert "install_query_interval" not in hreason, \
+        "host baselines cannot be lifted — don't suggest the installer"
+
+    fleet = vmap_streams(single, 3)
+    freason = capabilities(fleet)["query_interval"].reason
+    assert "install_query_interval(fleet, plane)" in freason
+    assert "no history plane" in freason
